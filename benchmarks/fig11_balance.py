@@ -1,0 +1,37 @@
+"""Fig 11: latency breakdown before/after balancing (bank idle cycles).
+
+Paper example: LLaMA3-8B, 12k sequence — unbalanced placement leaves
+~3613 idle cycles on the streaming-head banks; balancing eliminates them
+(2.01x in their example).
+"""
+import dataclasses
+
+from repro.configs import get_arch
+from repro.hbsim import HBConfig, attention_decode
+
+
+def run(csv=True):
+    cfg = get_arch("llama3-8b")
+    h2 = dataclasses.replace(cfg.h2eal, share_window=1)
+    hb = HBConfig()
+    seq = 12 * 1024
+    u = attention_decode(cfg, seq, "sparse_unbalanced", hb, h2=h2)
+    b = attention_decode(cfg, seq, "h2eal", hb, h2=h2)
+    # idle cycles on the fastest bank while the slowest gates the layer
+    freq = 400e6
+    per_layer_u = u["latency_s"] / len(cfg.attention_layers)
+    fastest = min(t for t in u["bank_times"] if t > 0)
+    idle_cycles = (per_layer_u - fastest) * freq
+    speedup = u["latency_s"] / b["latency_s"]
+    if csv:
+        print(f"fig11,unbalanced_idle_cycles,{idle_cycles:.0f},paper,3613")
+        print(f"fig11,balance_speedup,{speedup:.2f},paper,2.01")
+        bt = ",".join(f"{t*1e6:.2f}" for t in sorted(u["bank_times"]))
+        print(f"fig11,unbalanced_bank_times_us,{bt}")
+        bt = ",".join(f"{t*1e6:.2f}" for t in sorted(b["bank_times"]))
+        print(f"fig11,balanced_bank_times_us,{bt}")
+    return {"idle_cycles": idle_cycles, "speedup": speedup}
+
+
+if __name__ == "__main__":
+    run()

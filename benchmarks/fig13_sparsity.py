@@ -1,0 +1,101 @@
+"""Fig 13 proxy: accuracy vs static sparsity + NIAH selection recall.
+
+No LLaMA3/LongBench offline, so two measurable proxies with the exact
+algorithm:
+  (a) logit fidelity: cosine(prefill logits, full-attention logits) on a
+      reduced model while sweeping static_sparsity — the Fig 13 trade-off
+      curve shape;
+  (b) NIAH selection recall: plant a needle key at depth x context
+      position; query with the key; measure whether page selection ranks
+      the needle's page into the top-k (the mechanism NIAH accuracy rests
+      on) — no trained weights required.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import H2ealConfig
+from repro.core import paging
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def logit_fidelity(csv=True):
+    cfg = reduced(get_arch("smollm-360m"))
+    params = M.init_params(cfg, KEY)
+    prompts = jax.random.randint(KEY, (4, 96), 0, cfg.vocab_size)
+    full = dataclasses.replace(cfg, h2eal=H2ealConfig(enabled=False))
+    lg_f, _ = M.prefill(full, params, prompts, capacity=128)
+    b = np.asarray(lg_f, np.float64)
+    out = []
+    for sp in (0.0, 0.25, 0.5, 0.75, 1.0):
+        h2 = H2ealConfig(sink=2, local=16, page_size=8, select_budget=32,
+                         share_window=2, static_sparsity=sp)
+        cfg_s = dataclasses.replace(cfg, h2eal=h2)
+        lg_s, _ = M.prefill(cfg_s, params, prompts, capacity=128)
+        a = np.asarray(lg_s, np.float64)
+        cos = float(np.mean(np.sum(a * b, -1) /
+                            (np.linalg.norm(a, axis=-1)
+                             * np.linalg.norm(b, axis=-1))))
+        out.append((sp, cos))
+        if csv:
+            print(f"fig13_fidelity,static_sparsity,{sp},logit_cos,{cos:.4f}")
+    return out
+
+
+def niah_selection_recall(csv=True, ctx_lens=(512, 1024, 2048),
+                          depths=(0.1, 0.3, 0.5, 0.7, 0.9)):
+    """Does top-k page selection retrieve the needle's page?"""
+    d = 64
+    page = 32
+    h2 = H2ealConfig(sink=4, local=64, page_size=page, select_budget=128,
+                     share_window=1)
+    top_k = h2.top_k_pages
+    results = []
+    for s in ctx_lens:
+        n_pages = s // page
+        for depth in depths:
+            hits = 0
+            trials = 20
+            for t in range(trials):
+                k1, k2 = jax.random.split(
+                    jax.random.fold_in(KEY, t * 1000 + s + int(depth * 100)))
+                keys = jax.random.normal(k1, (1, 1, s, d))
+                needle = jax.random.normal(k2, (1, 1, d)) * 2.0
+                pos = int(s * depth)
+                keys = keys.at[:, :, pos].set(needle[:, 0])
+                q = needle  # query == needle key (retrieval semantics)
+                kp = keys.reshape(1, 1, n_pages, page, d)
+                tau_min = kp.min(axis=3)
+                tau_max = kp.max(axis=3)
+                page_start = jnp.arange(n_pages, dtype=jnp.int32)[None, None] * page
+                page_start = jnp.broadcast_to(page_start, (1, 1, n_pages))
+                scores = paging.score_pages(
+                    q, tau_min, tau_max, page_start, jnp.int32(s),
+                    sink=h2.sink, local=h2.local, page=page)
+                sel = paging.select_pages(scores, top_k)
+                needle_page = pos // page
+                # needle inside sink/local region counts as covered
+                first_local = max(s - h2.local, 0) // page
+                covered = (needle_page < 1 or needle_page >= first_local or
+                           needle_page in np.asarray(sel[0, 0]).tolist())
+                hits += bool(covered)
+            recall = hits / trials
+            results.append((s, depth, recall))
+            if csv:
+                print(f"fig13_niah,ctx,{s},depth,{depth},recall,{recall:.2f}")
+    return results
+
+
+def run(csv=True):
+    a = logit_fidelity(csv)
+    b = niah_selection_recall(csv)
+    return {"fidelity": a, "niah": b}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig 9: normalized attention speedup + energy efficiency.
+
+Three models x decode sequence lengths x {full, sparse w/o balance,
+H²EAL}, on the hbsim cycle model. share_window=1 (per-step selection, the
+paper's micro-benchmark setting).
+"""
+import dataclasses
+
+from repro.configs import get_arch
+from repro.hbsim import attention_decode
+
+MODELS = ("mistral-7b", "llama2-7b", "llama3-8b")
+SEQS = (16384, 65536, 262144)
+PAPER_256K = {  # speedup vs full @256k, energy-eff vs full @256k
+    "mistral-7b": (28.09, 69.20),
+    "llama2-7b": (48.21, 73.48),
+    "llama3-8b": (28.20, 70.45),
+}
+
+
+def run(csv=True):
+    rows = []
+    for name in MODELS:
+        cfg = get_arch(name)
+        h2 = dataclasses.replace(cfg.h2eal, share_window=1)
+        for seq in SEQS:
+            f = attention_decode(cfg, seq, "full", h2=h2)
+            u = attention_decode(cfg, seq, "sparse_unbalanced", h2=h2)
+            h = attention_decode(cfg, seq, "h2eal", h2=h2)
+            speed = f["latency_s"] / h["latency_s"]
+            bal = u["latency_s"] / h["latency_s"]
+            en = f["energy_j"] / h["energy_j"]
+            rows.append((name, seq, speed, bal, en))
+            if csv:
+                print(f"fig9,{name},{seq},{speed:.2f},{bal:.2f},{en:.2f}")
+    if csv:
+        for name, (ps, pe) in PAPER_256K.items():
+            r = next(x for x in rows if x[0] == name and x[1] == 262144)
+            print(f"fig9_vs_paper,{name},speedup,{r[2]:.1f},paper,{ps}")
+            print(f"fig9_vs_paper,{name},energy,{r[4]:.1f},paper,{pe}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: us_per_call of the jitted reference ops on
+this host (CPU). The Pallas kernels target TPU; on CPU we time the ref
+implementations that the dry-run lowers, which is what XLA's cost model
+sees. Derived column = GB/s effective for memory-bound ops."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(f, *args, iters=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv=True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # flash attention prefill tile
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _time(f, q, k, v)
+    rows.append(("flash_attention_1k", us, f"{2*2*1024*1024*64*8/us/1e3:.1f}MFLOP/s"))
+    # paged decode attention
+    q2 = jax.random.normal(key, (8, 8, 64))
+    k2 = jax.random.normal(key, (8, 2, 4096, 64))
+    valid = jnp.ones((8, 2, 4096), bool)
+    g = jax.jit(lambda q, k, v, m: ref.paged_attention_ref(q, k, v, m))
+    us = _time(g, q2, k2, k2, valid)
+    bytes_ = 8 * 2 * 4096 * 64 * 4 * 2
+    rows.append(("paged_attention_4k", us, f"{bytes_/us/1e3:.1f}GB/s"))
+    # page scoring
+    tau = jax.random.normal(key, (8, 2, 1024, 64))
+    h = jax.jit(lambda q, a, b: ref.page_score_ref(q, a, b))
+    us = _time(h, q2, tau, tau)
+    rows.append(("page_score_1kpages", us,
+                 f"{8*2*1024*64*4*2/us/1e3:.1f}GB/s"))
+    if csv:
+        for name, us, derived in rows:
+            print(f"kernel,{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

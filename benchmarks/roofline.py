@@ -1,0 +1,45 @@
+"""Roofline table generator: reads dryrun JSON -> markdown for
+EXPERIMENTS.md §Roofline."""
+import argparse
+import json
+
+
+def fmt(results):
+    lines = [
+        "| arch | shape | mesh | kind | compute s | memory s | coll s | "
+        "dominant | MFLOPs/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - "
+                         f"| - | - | - | ERROR | - | {r['error'][:60]} |")
+            continue
+        rl = r["roofline"]
+        ratio = (r["model_flops_global"] / r["hlo_flops_global"]
+                 if r.get("hlo_flops_global") else float("nan"))
+        terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+                 "collective": rl["collective_s"]}
+        dom = rl["dominant"]
+        note = r.get("layout") or ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+            f"| {rl['collective_s']:.2e} | **{dom}** "
+            f"| {ratio:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="+")
+    args = ap.parse_args()
+    results = []
+    for p in args.json:
+        with open(p) as f:
+            results.extend(json.load(f))
+    print(fmt(results))
+
+
+if __name__ == "__main__":
+    main()

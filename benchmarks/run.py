@@ -1,0 +1,26 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,...`` CSV rows. The roofline table (EXPERIMENTS.md) is
+produced separately by ``repro.launch.dryrun`` + ``benchmarks/roofline.py``
+(it needs the 512-fake-device environment).
+"""
+
+
+def main() -> None:
+    from benchmarks import fig9_attention, table3_e2e, fig11_balance
+    from benchmarks import fig13_sparsity, kernels_micro
+
+    print("# fig9: attention speedup/energy (hbsim, share_window=1)")
+    fig9_attention.run()
+    print("# table3: end-to-end throughput/energy (hbsim)")
+    table3_e2e.run()
+    print("# fig11: balance ablation (hbsim)")
+    fig11_balance.run()
+    print("# fig13 proxies: logit fidelity + NIAH selection recall")
+    fig13_sparsity.run()
+    print("# kernel micro-benchmarks (host CPU, ref impls)")
+    kernels_micro.run()
+
+
+if __name__ == "__main__":
+    main()

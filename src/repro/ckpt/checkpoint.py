@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: manifest + raw per-leaf binaries.
+
+Design for 1000+-node posture:
+  * step-atomic: written to ``<dir>/tmp.<step>`` then ``os.replace``d to
+    ``<dir>/step_<N>`` — a crash mid-save never corrupts the latest
+    checkpoint; ``latest_step`` scans committed directories only.
+  * reshard-on-restore: leaves are stored unsharded-logical (this container
+    is single-process; a multi-host deployment writes one file per shard
+    with the same manifest schema) and restored with ``jax.device_put``
+    to ANY target sharding/mesh — elastic restarts onto a different mesh
+    shape "just work".
+  * self-describing: manifest.json carries path, shape, dtype per leaf +
+    user metadata (step, data-stream position, config hash).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import ml_dtypes  # numpy bfloat16 support (ships with jax)
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+
+
+def _np_dtype(name: str):
+    if name == "bfloat16":
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(directory: str, tree, *, step: int, metadata: dict | None = None):
+    """Atomically write checkpoint for ``step``. Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    entries = []
+    for i, (path, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.bin"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(arr.tobytes())
+        entries.append({"path": path, "file": fname,
+                        "shape": list(arr.shape), "dtype": arr.dtype.name})
+    manifest = {"step": step, "leaves": entries,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, target_tree, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``target_tree``.
+
+    shardings: optional pytree (same structure) of NamedShardings — leaves
+    are device_put with them (reshard-on-restore / elastic).
+    Returns (tree, metadata).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat_t = jax.tree_util.tree_flatten_with_path(target_tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat_t[0]]
+    flat_s = (jax.tree.leaves(shardings) if shardings is not None
+              else [None] * len(paths))
+    out = []
+    for (path, ref_leaf), shard in zip(
+            [(jax.tree_util.keystr(p), l) for p, l in flat_t[0]], flat_s):
+        e = by_path.get(path)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        with open(os.path.join(d, e["file"]), "rb") as f:
+            arr = np.frombuffer(f.read(), dtype=_np_dtype(e["dtype"]))
+        arr = arr.reshape(e["shape"])
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), out)
+    return tree, manifest["metadata"]
+
+
+def prune_old(directory: str, keep: int = 3):
+    """Keep the newest ``keep`` checkpoints (garbage collection)."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)

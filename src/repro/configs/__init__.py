@@ -1,0 +1,41 @@
+"""Config registry: import every arch module so REGISTRY is populated."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    H2ealConfig,
+    MoEConfig,
+    REGISTRY,
+    SHAPES,
+    SSMConfig,
+    ShapeConfig,
+    get_arch,
+    reduced,
+    register,
+)
+
+# assigned architectures (public pool)
+from repro.configs import internvl2_1b  # noqa: F401
+from repro.configs import zamba2_2p7b  # noqa: F401
+from repro.configs import gemma3_1b  # noqa: F401
+from repro.configs import internlm2_20b  # noqa: F401
+from repro.configs import qwen2_72b  # noqa: F401
+from repro.configs import smollm_360m  # noqa: F401
+from repro.configs import xlstm_125m  # noqa: F401
+from repro.configs import musicgen_large  # noqa: F401
+from repro.configs import qwen3_moe_235b  # noqa: F401
+from repro.configs import kimi_k2_1t  # noqa: F401
+
+# paper's own evaluation models (hbsim benchmarks)
+from repro.configs import paper_models  # noqa: F401
+
+ASSIGNED = (
+    "internvl2-1b",
+    "zamba2-2.7b",
+    "gemma3-1b",
+    "internlm2-20b",
+    "qwen2-72b",
+    "smollm-360m",
+    "xlstm-125m",
+    "musicgen-large",
+    "qwen3-moe-235b-a22b",
+    "kimi-k2-1t-a32b",
+)

@@ -1,0 +1,270 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything is a frozen dataclass so configs are hashable and usable as jit
+static arguments. Arch configs live in one file per architecture under
+``repro.configs`` and register themselves into ``REGISTRY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# H2EAL technique config (the paper's contribution, attachable to any arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class H2ealConfig:
+    """Hybrid static-dynamic sparse attention (paper §IV-A).
+
+    static_sparsity: fraction of KV heads that are streaming heads (paper: 0.5).
+    sink / local: token counts kept by streaming heads (and always kept by
+        retrieval heads, paper §IV-A.4 "retrieval heads also attend to sink and
+        local tokens" following StreamingLLM).
+    page_size: contiguous KV tokens per page (paper: 32).
+    select_budget: total selected length for retrieval heads (paper: 4k);
+        top-k pages with k = select_budget // page_size.
+    kv_budget: max resident KV tokens per retrieval head before eviction of the
+        lowest-accumulated-importance page (paper "memory consideration").
+        0 means no eviction (keep everything, select sparsely).
+    share_window: number of consecutive decode queries sharing one page
+        selection (paper follows LServe [27]).
+    """
+
+    enabled: bool = True
+    static_sparsity: float = 0.5
+    sink: int = 4
+    local: int = 256
+    page_size: int = 32
+    select_budget: int = 4096
+    kv_budget: int = 0
+    share_window: int = 4
+
+    @property
+    def top_k_pages(self) -> int:
+        return max(1, self.select_budget // self.page_size)
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+ATTN_FULL = "full"              # dense causal attention every layer
+ATTN_LOCAL_GLOBAL = "local_global"  # gemma3-style N local : 1 global
+MIXER_ATTENTION = "attention"
+MIXER_MAMBA2 = "mamba2"
+MIXER_SLSTM = "slstm"
+MIXER_MLSTM = "mlstm"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    # d_ff of each expert (the arch's d_ff field is per-expert for MoE archs)
+    shared_expert_ff: int = 0  # optional dense shared expert (0 = none)
+    # Switch-style capacity factor; <= 0 means dropless (cap = T * top_k,
+    # used by the reduced smoke configs where exactness is tested)
+    capacity_factor: float = 1.25
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block parameters, used by zamba2 hybrid layers."""
+
+    state_dim: int = 64
+    conv_dim: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qkv_bias: bool = False           # qwen2
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # attention pattern
+    attn_pattern: str = ATTN_FULL
+    local_window: int = 0            # for local_global pattern
+    local_global_ratio: int = 0      # N local layers per 1 global (gemma3: 5)
+    # per-layer mixer sequence; empty -> all attention.
+    # e.g. zamba2 repeats mamba2 blocks with periodic attention; xlstm
+    # alternates slstm/mlstm.
+    mixer_pattern: Tuple[str, ...] = ()
+    # if False, the FFN exists only on attention-mixer layers (zamba2: mamba2
+    # blocks carry their own projections and have no separate FFN)
+    ffn_every_layer: bool = True
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    h2eal: H2ealConfig = field(default_factory=H2ealConfig)
+    # modality frontend stub: inputs are precomputed embeddings, not token ids
+    embed_frontend_stub: bool = False
+    frontend_dim: int = 0            # dim of precomputed frame/patch embeddings
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    def mixer_for_layer(self, i: int) -> str:
+        if self.mixer_pattern:
+            return self.mixer_pattern[i % len(self.mixer_pattern)]
+        return MIXER_ATTENTION
+
+    def layer_has_ffn(self, i: int) -> bool:
+        if self.d_ff == 0 and not self.moe.enabled:
+            return False
+        if self.ffn_every_layer:
+            return True
+        return self.mixer_for_layer(i) == MIXER_ATTENTION
+
+    def layer_is_global_attn(self, i: int) -> bool:
+        """For local_global pattern: is layer i a global-attention layer."""
+        if self.attn_pattern != ATTN_LOCAL_GLOBAL:
+            return True
+        r = self.local_global_ratio
+        return (i % (r + 1)) == r
+
+    @property
+    def attention_layers(self) -> Tuple[int, ...]:
+        return tuple(
+            i for i in range(self.num_layers)
+            if self.mixer_for_layer(i) == MIXER_ATTENTION
+        )
+
+    @property
+    def has_attention(self) -> bool:
+        return len(self.attention_layers) > 0
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for 6ND model-flops accounting)."""
+        hd = self.resolved_head_dim
+        d = self.d_model
+        n = 0
+        # embeddings (+ untied head)
+        n += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.num_layers):
+            mixer = self.mixer_for_layer(i)
+            if mixer == MIXER_ATTENTION:
+                q = d * self.num_heads * hd
+                kv = 2 * d * self.num_kv_heads * hd
+                o = self.num_heads * hd * d
+                n += q + kv + o
+            elif mixer == MIXER_MAMBA2:
+                inner = self.ssm.expand * d
+                # in_proj (z,x,B,C,dt) + out_proj + conv
+                n += d * (2 * inner + 2 * self.ssm.state_dim) + inner * d
+                n += inner * self.ssm.conv_dim
+            elif mixer in (MIXER_SLSTM, MIXER_MLSTM):
+                n += 4 * d * d + d * d  # gates + out proj (approx)
+            # ffn
+            if not self.layer_has_ffn(i):
+                n += 2 * d
+                continue
+            if self.moe.enabled:
+                n += self.moe.num_experts * 3 * d * self.d_ff
+                n += d * self.moe.num_experts  # router
+                if self.moe.shared_expert_ff:
+                    n += 3 * d * self.moe.shared_expert_ff
+            elif self.d_ff:
+                n += 3 * d * self.d_ff  # swiglu
+            n += 2 * d  # norms
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        inactive = (
+            self.num_layers
+            * (self.moe.num_experts - self.moe.top_k)
+            * 3 * d * self.d_ff
+        )
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set for LM-family archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    from repro import configs  # noqa: F401  (ensure modules imported)
+
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    small = dict(
+        num_layers=min(cfg.num_layers, 2 if not cfg.mixer_pattern else len(set(cfg.mixer_pattern))),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        local_window=64 if cfg.local_window else 0,
+    )
+    if cfg.moe.enabled:
+        small["moe"] = MoEConfig(num_experts=4, top_k=2,
+                                 shared_expert_ff=64 if cfg.moe.shared_expert_ff else 0,
+                                 capacity_factor=0.0)  # dropless for exactness
+    if cfg.mixer_pattern:
+        # keep the family's block mix but short
+        small["mixer_pattern"] = cfg.mixer_pattern[: max(2, min(4, len(cfg.mixer_pattern)))]
+        small["num_layers"] = len(small["mixer_pattern"])
+    small["h2eal"] = dataclasses.replace(
+        cfg.h2eal, sink=2, local=16, page_size=8, select_budget=32, share_window=2
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)

@@ -1,0 +1,47 @@
+"""The paper's own evaluation models (§V-A.2): Mistral-7B, LLaMA2-7B,
+LLaMA3-8B. Used by the hbsim benchmarks (Fig 9/10/11, Table III) and as
+extra selectable archs.
+"""
+from repro.configs.base import ArchConfig, register
+
+LLAMA2_7B = register(ArchConfig(
+    name="llama2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=1e4,
+    source="arXiv:2307.09288",
+))
+
+LLAMA3_8B = register(ArchConfig(
+    name="llama3-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=5e5,
+    source="llama3",
+))
+
+MISTRAL_7B = register(ArchConfig(
+    name="mistral-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=1e4,
+    source="mistral",
+))

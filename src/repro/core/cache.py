@@ -1,0 +1,253 @@
+"""KV-cache structures for H²EAL serving.
+
+Three cache kinds:
+
+  FullCache    — dense (B, H, S, D) baseline (paper's "full attention" HB
+                 baseline; also used when ``h2eal.enabled = False``).
+  PagedCache   — retrieval heads: paged KV + Quest min/max metadata +
+                 accumulated importance (+ page_start table so a fixed-size
+                 pool with eviction is expressible with static shapes).
+  StreamCache  — streaming heads: sink + local ring buffer only (this is
+                 where the paper's memory reduction comes from).
+
+All are registered pytree dataclasses so they can live inside jitted
+functions and be sharded leaf-wise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _dc(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    return jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+
+
+@_dc
+@dataclasses.dataclass
+class FullCache:
+    k: Array  # (B, Hkv, S, D)
+    v: Array  # (B, Hkv, S, D)
+
+
+@_dc
+@dataclasses.dataclass
+class PagedCache:
+    k_pages: Array     # (B, Hr, C, P, D)
+    v_pages: Array     # (B, Hr, C, P, D)
+    tau_min: Array     # (B, Hr, C, D)   elementwise min of keys in page
+    tau_max: Array     # (B, Hr, C, D)
+    importance: Array  # (B, Hr, C)      accumulated relevance (f32)
+    page_start: Array  # (B, Hr, C)      absolute pos of first token; -1 empty
+    sel_idx: Array     # (B, Hr, K)      cached top-k selection (shared window)
+
+
+@_dc
+@dataclasses.dataclass
+class StreamCache:
+    k: Array  # (B, Hs, W, D)  W = sink + local_cap, local part is a ring
+    v: Array  # (B, Hs, W, D)
+    pos: Array  # (B, Hs, W)   absolute position stored in each slot; -1 empty
+
+
+def make_full_cache(b, h_kv, capacity, d, dtype=jnp.bfloat16):
+    z = jnp.zeros((b, h_kv, capacity, d), dtype)
+    return FullCache(k=z, v=z)
+
+
+def make_paged_cache(b, h_r, num_pages, page, d, top_k, dtype=jnp.bfloat16):
+    zp = jnp.zeros((b, h_r, num_pages, page, d), dtype)
+    return PagedCache(
+        k_pages=zp,
+        v_pages=zp,
+        tau_min=jnp.full((b, h_r, num_pages, d), jnp.inf, jnp.float32),
+        tau_max=jnp.full((b, h_r, num_pages, d), -jnp.inf, jnp.float32),
+        importance=jnp.zeros((b, h_r, num_pages), jnp.float32),
+        page_start=jnp.full((b, h_r, num_pages), -1, jnp.int32),
+        sel_idx=jnp.zeros((b, h_r, top_k), jnp.int32),
+    )
+
+
+def make_stream_cache(b, h_s, sink, local_cap, d, dtype=jnp.bfloat16):
+    w = sink + local_cap
+    z = jnp.zeros((b, h_s, w, d), dtype)
+    return StreamCache(k=z, v=z, pos=jnp.full((b, h_s, w), -1, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Append ops (decode: one token for all heads of one layer)
+# ---------------------------------------------------------------------------
+
+
+def full_cache_append(cache: FullCache, k_new: Array, v_new: Array, length: Array):
+    """k_new/v_new: (B, Hkv, D); length: scalar int32 current context len."""
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, length, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, length, 0))
+    return FullCache(k=k, v=v)
+
+
+def stream_cache_append(cache: StreamCache, k_new, v_new, length, *, sink: int):
+    """Ring-buffer append: pos<sink go to slot=pos, else ring over local part."""
+    w = cache.k.shape[2]
+    local_cap = w - sink
+    slot = jnp.where(length < sink, length, sink + (length - sink) % local_cap)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, slot, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache.pos, jnp.broadcast_to(length, cache.pos.shape[:2])[:, :, None].astype(jnp.int32),
+        (0, 0, slot))
+    return StreamCache(k=k, v=v, pos=pos)
+
+
+def paged_cache_append(cache: PagedCache, k_new, v_new, length):
+    """Append one token at absolute position ``length`` (page = length//P).
+
+    Metadata for the page is updated incrementally (running min/max).
+    No-eviction layout: page index is position//P (capacity covers max ctx).
+    """
+    p = cache.k_pages.shape[3]
+    page = length // p
+    off = length % p
+    k_pages = jax.lax.dynamic_update_slice(
+        cache.k_pages, k_new[:, :, None, None, :].astype(cache.k_pages.dtype),
+        (0, 0, page, off, 0))
+    v_pages = jax.lax.dynamic_update_slice(
+        cache.v_pages, v_new[:, :, None, None, :].astype(cache.v_pages.dtype),
+        (0, 0, page, off, 0))
+    kf = k_new.astype(jnp.float32)[:, :, None, :]
+    old_min = jax.lax.dynamic_slice(
+        cache.tau_min, (0, 0, page, 0),
+        (cache.tau_min.shape[0], cache.tau_min.shape[1], 1, cache.tau_min.shape[3]))
+    old_max = jax.lax.dynamic_slice(
+        cache.tau_max, (0, 0, page, 0),
+        (cache.tau_max.shape[0], cache.tau_max.shape[1], 1, cache.tau_max.shape[3]))
+    tau_min = jax.lax.dynamic_update_slice(
+        cache.tau_min, jnp.minimum(old_min, kf), (0, 0, page, 0))
+    tau_max = jax.lax.dynamic_update_slice(
+        cache.tau_max, jnp.maximum(old_max, kf), (0, 0, page, 0))
+    start = jax.lax.dynamic_update_slice(
+        cache.page_start,
+        jnp.broadcast_to(page * p, cache.page_start.shape[:2])[:, :, None].astype(jnp.int32),
+        (0, 0, page))
+    return dataclasses.replace(
+        cache, k_pages=k_pages, v_pages=v_pages,
+        tau_min=tau_min, tau_max=tau_max, page_start=start)
+
+
+def pool_append(cache: PagedCache, k_new: Array, v_new: Array, length: Array,
+                *, page: int, sink: int, local: int):
+    """Fixed-pool append with eviction (paper §IV-A.3 'memory
+    consideration'): the pool holds ``C_pool`` pages; when a NEW page opens
+    and the pool is full, the live page with the LOWEST accumulated
+    importance is overwritten. Sink and local-window pages are protected.
+
+    k_new/v_new: (B, Hr, D); length: scalar. Slots are per-(B, H) (each
+    head evicts independently, as in the paper).
+    """
+    b, h, c_pool, p_sz, d = cache.k_pages.shape
+    pg = length // page
+    off = length % page
+    pos0 = (pg * page).astype(jnp.int32)
+
+    # slot of the page currently open at pos0 (if any)
+    is_open = cache.page_start == pos0                      # (B,H,C)
+    open_slot = jnp.argmax(is_open, axis=-1).astype(jnp.int32)
+    has_open = jnp.any(is_open, axis=-1)
+
+    # eviction candidate: dead slots first, else lowest importance among
+    # unprotected live pages (sink pages and the local window never evict)
+    dead = cache.page_start < 0
+    local_lo = jnp.maximum(length + 1 - local, 0)
+    protected = (cache.page_start < sink) | (cache.page_start >= (local_lo // page) * page)
+    protected &= ~dead
+    evict_score = jnp.where(dead, -jnp.inf,
+                            jnp.where(protected, jnp.inf, cache.importance))
+    evict_slot = jnp.argmin(evict_score, axis=-1).astype(jnp.int32)
+
+    slot = jnp.where(has_open, open_slot, evict_slot)       # (B,H)
+    fresh = ~has_open                                       # opening a page
+
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(h)[None, :]
+    kf = k_new.astype(jnp.float32)
+
+    k_pages = cache.k_pages.at[bi, hi, slot, off].set(
+        k_new.astype(cache.k_pages.dtype))
+    v_pages = cache.v_pages.at[bi, hi, slot, off].set(
+        v_new.astype(cache.v_pages.dtype))
+    old_min = jnp.where(fresh[..., None], jnp.inf,
+                        cache.tau_min[bi, hi, slot])
+    old_max = jnp.where(fresh[..., None], -jnp.inf,
+                        cache.tau_max[bi, hi, slot])
+    tau_min = cache.tau_min.at[bi, hi, slot].set(jnp.minimum(old_min, kf))
+    tau_max = cache.tau_max.at[bi, hi, slot].set(jnp.maximum(old_max, kf))
+    imp = jnp.where(fresh, 0.0, cache.importance[bi, hi, slot])
+    importance = cache.importance.at[bi, hi, slot].set(imp)
+    page_start = cache.page_start.at[bi, hi, slot].set(
+        jnp.broadcast_to(pos0, (b, h)))
+    return dataclasses.replace(
+        cache, k_pages=k_pages, v_pages=v_pages, tau_min=tau_min,
+        tau_max=tau_max, importance=importance, page_start=page_start)
+
+
+# ---------------------------------------------------------------------------
+# Prefill constructors (build caches from full-sequence K/V)
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_from_prefill(k, v, num_pages, page, top_k):
+    """k/v: (B, S, Hr, D) -> PagedCache with S//P pages filled (S % P == 0)."""
+    b, s, h, d = k.shape
+    n_filled = s // page
+    kp = k.transpose(0, 2, 1, 3).reshape(b, h, n_filled, page, d)
+    vp = v.transpose(0, 2, 1, 3).reshape(b, h, n_filled, page, d)
+    pad = num_pages - n_filled
+    kf = kp.astype(jnp.float32)
+    tau_min = jnp.pad(kf.min(axis=3), ((0, 0), (0, 0), (0, pad), (0, 0)),
+                      constant_values=jnp.inf)
+    tau_max = jnp.pad(kf.max(axis=3), ((0, 0), (0, 0), (0, pad), (0, 0)),
+                      constant_values=-jnp.inf)
+    z = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    start = jnp.arange(num_pages, dtype=jnp.int32) * page
+    start = jnp.where(jnp.arange(num_pages) < n_filled, start, -1)
+    return PagedCache(
+        k_pages=jnp.pad(kp, z), v_pages=jnp.pad(vp, z),
+        tau_min=tau_min, tau_max=tau_max,
+        importance=jnp.zeros((b, h, num_pages), jnp.float32),
+        page_start=jnp.broadcast_to(start, (b, h, num_pages)).astype(jnp.int32),
+        sel_idx=jnp.zeros((b, h, top_k), jnp.int32),
+    )
+
+
+def stream_cache_from_prefill(k, v, *, sink, local_cap, length):
+    """k/v: (B, S, Hs, D); keep sink + last min(local_cap, S-sink) tokens.
+
+    ``length`` is the static int prefill length (== S).
+    """
+    b, s, h, d = k.shape
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    w = sink + local_cap
+    cache = make_stream_cache(b, h, sink, local_cap, d, dtype=k.dtype)
+    # positions that belong in the ring and their slots
+    pos = jnp.arange(s)
+    slot = jnp.where(pos < sink, pos, sink + (pos - sink) % local_cap)
+    keep = (pos < sink) | (pos >= max(sink, length - local_cap))
+    # scatter (later positions win, matching ring semantics) — iterate via
+    # segment trick: sort by (keep, pos) then scatter
+    slot_eff = jnp.where(keep, slot, w)  # dump discarded into overflow slot
+    kk = jnp.zeros((b, h, w + 1, d), k.dtype).at[:, :, slot_eff].set(k)
+    vv = jnp.zeros((b, h, w + 1, d), v.dtype).at[:, :, slot_eff].set(v)
+    pp = jnp.full((b, h, w + 1), -1, jnp.int32).at[:, :, slot_eff].set(
+        jnp.broadcast_to(pos, (b, h, s)).astype(jnp.int32))
+    return StreamCache(k=kk[:, :, :w], v=vv[:, :, :w], pos=pp[:, :, :w])

@@ -1,0 +1,66 @@
+"""Head identification (paper §IV-A.1, following DuoAttention).
+
+During identification training, every head's output is a convex mix of
+full attention and streaming attention gated by a trainable α ∈ [0,1]
+(the ONLY trainable parameter). An L1 penalty pushes α toward 0; heads
+whose α stays high are retrieval heads.
+
+    Attn_{i,j} = α_{i,j} · Full_Attn + (1 − α_{i,j}) · Streaming_Attn
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+def init_alpha(num_layers: int, n_kv: int) -> Array:
+    """α initialised to 1 (paper: 'At beginning, α's are initialized to 1')."""
+    return jnp.ones((num_layers, n_kv), jnp.float32)
+
+
+def clip_alpha(alpha: Array) -> Array:
+    return jnp.clip(alpha, 0.0, 1.0)
+
+
+def gated_attention(q, k, v, alpha_layer, *, sink: int, local: int,
+                    impl: str = "ref"):
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D); alpha_layer: (Hkv,).
+
+    Returns the α-gated mix of full and streaming attention per kv head
+    (broadcast over the GQA group).
+    """
+    b, s, hq, d = q.shape
+    h_kv = k.shape[2]
+    group = hq // h_kv
+    full = kops.flash_attention(q, k, v, causal=True, impl=impl)
+    stream = kops.flash_attention(q, k, v, causal=True, window=local,
+                                  sink=sink, impl=impl)
+    a = jnp.repeat(clip_alpha(alpha_layer), group)  # (Hq,)
+    a = a[None, None, :, None]
+    return a * full + (1.0 - a) * stream
+
+
+def gating_loss(task_loss: Array, alpha: Array, lam: float = 0.05) -> Array:
+    """task_loss + λ·‖α‖₁ (drives unnecessary heads toward streaming)."""
+    return task_loss + lam * jnp.sum(jnp.abs(alpha))
+
+
+def classify_heads(alpha: Array, static_sparsity: float):
+    """Per layer: permutation putting retrieval heads first.
+
+    The number of retrieval heads per layer is fixed by ``static_sparsity``
+    (paper §V-B sets the *proportion* of streaming heads globally); which
+    heads are retrieval is decided by the per-layer α ranking.
+
+    Returns perms (num_layers, Hkv) int32: layer l's kv-head order.
+    """
+    num_layers, h_kv = alpha.shape
+    n_stream = round(h_kv * static_sparsity)
+    n_ret = h_kv - n_stream
+    order = jnp.argsort(-alpha, axis=1)  # descending α: retrieval first
+    del n_ret
+    return order.astype(jnp.int32)

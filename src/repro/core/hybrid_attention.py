@@ -1,0 +1,536 @@
+"""H²EAL hybrid static-dynamic sparse attention (paper §IV-A).
+
+Per attention layer, KV heads are ordered by a per-layer permutation
+(produced by the scheduler, sched/tiling.py) so that the first
+``n_retrieval`` kv heads are retrieval heads and the rest are streaming
+heads. Counts are static (static_sparsity is a global proportion, paper
+§V-B), the permutation is data — so every layer lowers to the same program
+and the whole stack scans.
+
+Prefill:  retrieval heads -> full causal flash attention;
+          streaming heads -> sink+local flash attention.
+Decode:   retrieval heads -> page-score -> top-k -> paged attention over
+          [sink pages | selected pages | local pages];
+          streaming heads -> attention over the sink+local ring buffer.
+Selection is recomputed every ``share_window`` steps (``do_select``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import H2ealConfig
+from repro.core import cache as cachelib
+from repro.core import paging
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class AttnSpec:
+    """Static attention-layer spec (hashable; safe as jit static arg)."""
+
+    n_q: int
+    n_kv: int
+    head_dim: int
+    h2: H2ealConfig
+    window: int = 0        # >0: plain sliding-window layer (gemma3 local)
+    impl: str = "ref"
+
+    @property
+    def group(self) -> int:
+        return self.n_q // self.n_kv
+
+    @property
+    def n_retrieval(self) -> int:
+        if not self.h2.enabled or self.window > 0:
+            return self.n_kv
+        n_s = round(self.n_kv * self.h2.static_sparsity)
+        return max(self.n_kv - n_s, 0)
+
+    @property
+    def n_streaming(self) -> int:
+        return self.n_kv - self.n_retrieval
+
+
+def identity_perm(spec: AttnSpec) -> Array:
+    return jnp.arange(spec.n_kv, dtype=jnp.int32)
+
+
+def _permute_kv(x: Array, perm: Array) -> Array:
+    """x: (..., Hkv, ...) permuted on the kv-head axis (axis 2 of B,S,H,D
+    or axis 1 of B,H,D)."""
+    axis = 2 if x.ndim == 4 else 1
+    return jnp.take(x, perm, axis=axis)
+
+
+def _permute_q(q: Array, perm: Array, group: int) -> Array:
+    """q: (B, S, Hq, D) or (B, Hq, D): permute q heads following kv groups."""
+    if q.ndim == 4:
+        b, s, hq, d = q.shape
+        qg = q.reshape(b, s, hq // group, group, d)
+        qg = jnp.take(qg, perm, axis=2)
+        return qg.reshape(b, s, hq, d)
+    b, hq, d = q.shape
+    qg = q.reshape(b, hq // group, group, d)
+    qg = jnp.take(qg, perm, axis=1)
+    return qg.reshape(b, hq, d)
+
+
+def _inverse_perm(perm: Array) -> Array:
+    n = perm.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill_attention(spec: AttnSpec, q: Array, k: Array, v: Array,
+                      perm: Array | None = None) -> Array:
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    h2 = spec.h2
+    if spec.window > 0:  # plain sliding-window layer
+        return kops.flash_attention(q, k, v, causal=True, window=spec.window,
+                                    impl=spec.impl)
+    if not h2.enabled or spec.n_streaming == 0:
+        return kops.flash_attention(q, k, v, causal=True, impl=spec.impl)
+    if perm is None:
+        perm = identity_perm(spec)
+    g = spec.group
+    nr = spec.n_retrieval
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k, perm)
+    vp = _permute_kv(v, perm)
+    outs = []
+    if nr > 0:
+        outs.append(kops.flash_attention(
+            qp[:, :, : nr * g], kp[:, :, :nr], vp[:, :, :nr],
+            causal=True, impl=spec.impl))
+    if spec.n_streaming > 0:
+        outs.append(kops.flash_attention(
+            qp[:, :, nr * g:], kp[:, :, nr:], vp[:, :, nr:],
+            causal=True, window=h2.local, sink=h2.sink, impl=spec.impl))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return _permute_q(out, _inverse_perm(perm), g)
+
+
+def init_decode_state(spec: AttnSpec, k: Array, v: Array, length: int,
+                      capacity: int, perm: Array | None = None,
+                      interleave_shards: int = 1):
+    """Build (PagedCache, StreamCache) from prefill K/V.
+
+    k/v: (B, S, Hkv, D) post-RoPE; length == S (static). capacity: max
+    context (tokens) the paged cache must hold. interleave_shards > 1 lays
+    pages out round-robin across that many page-dim shards (co-placement).
+    """
+    h2 = spec.h2
+    if perm is None:
+        perm = identity_perm(spec)
+    kp = jnp.take(k, perm, axis=2)
+    vp = jnp.take(v, perm, axis=2)
+    nr = spec.n_retrieval
+    p = h2.page_size
+    num_pages = -(-capacity // p)
+    # pad sequence to page multiple for the paged constructor (stream cache
+    # is built from the UNPADDED sequence below)
+    s = k.shape[1]
+    pad = (-s) % p
+    kpad, vpad = kp, vp
+    if pad:
+        kpad = jnp.pad(kp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vpad = jnp.pad(vp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    paged = cachelib.paged_cache_from_prefill(
+        kpad[:, :, :nr], vpad[:, :, :nr], num_pages, p, h2.top_k_pages)
+    if pad:  # recompute metadata masking the pad tokens of the last page
+        offs = (jnp.arange(num_pages * p) < s).reshape(num_pages, p)
+        kpp = paged.k_pages.astype(jnp.float32)
+        tau_min = jnp.where(offs[None, None, :, :, None], kpp, jnp.inf).min(3)
+        tau_max = jnp.where(offs[None, None, :, :, None], kpp, -jnp.inf).max(3)
+        paged = dataclasses.replace(paged, tau_min=tau_min, tau_max=tau_max)
+    if interleave_shards > 1:
+        # permute the page dim to the interleaved physical layout:
+        # physical slot p holds logical page (p % c_loc) * nsh + p // c_loc
+        nsh = interleave_shards
+        assert num_pages % nsh == 0, (
+            f"page capacity {num_pages} must divide by {nsh} shards")
+        c_loc = num_pages // nsh
+        phys = jnp.arange(num_pages)
+        logical_of_phys = (phys % c_loc) * nsh + phys // c_loc
+        take = lambda a: jnp.take(a, logical_of_phys, axis=2)
+        paged = cachelib.PagedCache(
+            k_pages=take(paged.k_pages), v_pages=take(paged.v_pages),
+            tau_min=take(paged.tau_min), tau_max=take(paged.tau_max),
+            importance=take(paged.importance),
+            page_start=take(paged.page_start),
+            sel_idx=paged.sel_idx)
+    stream = cachelib.stream_cache_from_prefill(
+        kp[:, :, nr:], vp[:, :, nr:], sink=h2.sink,
+        local_cap=_local_cap(h2), length=length)
+    return paged, stream
+
+
+def _local_cap(h2: H2ealConfig) -> int:
+    # ring capacity: local window + one page of slack so the boundary page
+    # semantics match the paged side
+    return h2.local + h2.page_size
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    spec: AttnSpec,
+    q: Array,                 # (B, Hq, D) roped at position `length`
+    k_new: Array,             # (B, Hkv, D) roped
+    v_new: Array,             # (B, Hkv, D)
+    paged: cachelib.PagedCache,
+    stream: cachelib.StreamCache,
+    length: Array,            # scalar int32: context BEFORE this token
+    *,
+    do_select: bool,
+    perm: Array | None = None,
+):
+    """One decode step. Returns (out (B,Hq,D), paged', stream')."""
+    h2 = spec.h2
+    g = spec.group
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    q_r, q_s = qp[:, : nr * g], qp[:, nr * g:]
+    k_r, k_s = kp[:, :nr], kp[:, nr:]
+    v_r, v_s = vp[:, :nr], vp[:, nr:]
+    ctx = length + 1
+
+    outs = []
+    if nr > 0:
+        paged = cachelib.paged_cache_append(paged, k_r, v_r, length)
+        if do_select:
+            scores = paging.score_pages(
+                q_r, paged.tau_min, paged.tau_max, paged.page_start, ctx,
+                sink=h2.sink, local=h2.local, page=h2.page_size,
+                impl=spec.impl)
+            sel = paging.select_pages(scores, h2.top_k_pages)
+            paged = dataclasses.replace(
+                paged,
+                sel_idx=sel,
+                importance=paging.accumulate_importance(
+                    paged.importance, scores),
+            )
+        slots = paging.attended_page_slots(
+            paged.sel_idx, ctx, sink=h2.sink, local=h2.local,
+            page=h2.page_size)
+        gk, gv = paging.gather_pages(paged.k_pages, paged.v_pages, slots)
+        valid = paging.token_validity(
+            slots, paged.page_start, ctx, sink=h2.sink, local=h2.local,
+            page=h2.page_size, top_k=h2.top_k_pages)
+        outs.append(kops.paged_attention(q_r, gk, gv, valid, impl=spec.impl))
+    if spec.n_streaming > 0:
+        stream = cachelib.stream_cache_append(
+            stream, k_s, v_s, length, sink=h2.sink)
+        # exact sink+local mask (ring carries one page of slack)
+        valid_s = (stream.pos >= 0) & (
+            (stream.pos < h2.sink) | (stream.pos >= ctx - h2.local))
+        outs.append(kops.paged_attention(
+            q_s, stream.k, stream.v, valid_s, impl=spec.impl))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    out = _permute_q(out, _inverse_perm(perm), g)
+    return out, paged, stream
+
+
+# ---------------------------------------------------------------------------
+# Fixed-pool decode with eviction (paper §IV-A.3 "memory consideration")
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_pool(
+    spec: AttnSpec,
+    q, k_new, v_new,
+    paged: cachelib.PagedCache,
+    stream: cachelib.StreamCache,
+    length,
+    *,
+    do_select: bool,
+    perm=None,
+):
+    """Decode against a FIXED-SIZE page pool (capacity = kv_budget tokens):
+    when the pool is full, the lowest-accumulated-importance page is
+    overwritten (sink/local pages protected). Slots are arbitrary — sink
+    and local pages are found by their stored start positions.
+    """
+    h2 = spec.h2
+    g = spec.group
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    q_r, q_s = qp[:, : nr * g], qp[:, nr * g:]
+    ctx = length + 1
+    p_sz = h2.page_size
+
+    outs = []
+    if nr > 0:
+        paged = cachelib.pool_append(
+            paged, kp[:, :nr], vp[:, :nr], length,
+            page=p_sz, sink=h2.sink, local=h2.local)
+        if do_select:
+            scores = paging.score_pages(
+                q_r, paged.tau_min, paged.tau_max, paged.page_start, ctx,
+                sink=h2.sink, local=h2.local, page=p_sz, impl=spec.impl)
+            sel = paging.select_pages(scores, h2.top_k_pages)
+            paged = dataclasses.replace(
+                paged, sel_idx=sel,
+                importance=paging.accumulate_importance(
+                    paged.importance, scores))
+        # sink/local slots by position lookup (pool slots are arbitrary)
+        n_sink, n_local = paging.page_counts(sink=h2.sink, local=h2.local,
+                                             page=p_sz)
+        first_local = jnp.maximum(ctx - h2.local, 0) // p_sz
+        sink_pos = jnp.arange(n_sink, dtype=jnp.int32) * p_sz
+        local_pos = (first_local + jnp.arange(n_local, dtype=jnp.int32)) * p_sz
+        sink_slots = paging.slots_of_positions(paged.page_start, sink_pos)
+        local_slots = paging.slots_of_positions(paged.page_start, local_pos)
+        slots = jnp.concatenate([sink_slots, paged.sel_idx, local_slots],
+                                axis=2)
+        gk, gv = paging.gather_pages(paged.k_pages, paged.v_pages, slots)
+        valid = paging.token_validity(
+            slots, paged.page_start, ctx, sink=h2.sink, local=h2.local,
+            page=p_sz, top_k=h2.top_k_pages)
+        outs.append(kops.paged_attention(q_r, gk, gv, valid, impl=spec.impl))
+    if spec.n_streaming > 0:
+        stream = cachelib.stream_cache_append(
+            stream, kp[:, nr:], vp[:, nr:], length, sink=h2.sink)
+        valid_s = (stream.pos >= 0) & (
+            (stream.pos < h2.sink) | (stream.pos >= ctx - h2.local))
+        outs.append(kops.paged_attention(
+            q_s, stream.k, stream.v, valid_s, impl=spec.impl))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    out = _permute_q(out, _inverse_perm(perm), g)
+    return out, paged, stream
+
+
+# ---------------------------------------------------------------------------
+# Distributed memory-compute co-placement (paper §IV-B via shard_map)
+# ---------------------------------------------------------------------------
+#
+# The paged KV cache is sharded across the 'model' axis on the PAGE dim
+# with interleaved (round-robin) page->shard assignment (Fig 7b). Each
+# device appends/score/attends ONLY the pages it stores (compute moves to
+# the data), producing flash partials (m, l, o); the cross-bank softmax is
+# an exact (pmax, psum, psum) combine — the paper's FlashAttention-style
+# cross-bank communication, at (2+D) floats per head instead of whole
+# pages.
+
+
+def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
+                          paged: cachelib.PagedCache, length, *,
+                          do_select: bool, mesh, axis: str = "model"):
+    """Retrieval-head decode under interleaved co-placement.
+
+    q_r: (B, HqR, D); k_r/v_r: (B, Hr, D) — replicated over `axis`.
+    paged leaves sharded on the page dim over `axis` (page dim divisible).
+    Returns (out (B,HqR,D), new PagedCache).
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime import hints
+
+    h2 = spec.h2
+    p_sz = h2.page_size
+    cap_pages = paged.k_pages.shape[2]
+    nsh = int(mesh.shape[axis])
+    assert cap_pages % nsh == 0, (
+        f"page capacity {cap_pages} must divide by {axis}={nsh}; "
+        "round ServeConfig.capacity up to page_size*mesh_model pages")
+    c_loc = cap_pages // nsh
+    ba = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    b = q_r.shape[0]
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+    bspec = ba if b % dp == 0 else None
+
+    rep = P(bspec, None, None)
+    cache5 = P(bspec, None, axis, None, None)
+    cache4 = P(bspec, None, axis, None)
+    cache3 = P(bspec, None, axis)
+
+    def body(q, kn, vn, kp, vp, tmin, tmax, imp, pstart, sel_prev, length):
+        i = jax.lax.axis_index(axis)
+        ctx = length + 1
+        # ---- append (only the owner shard writes) ----
+        pg = length // p_sz
+        off = length % p_sz
+        phys = paging.interleave_slot(pg, cap_pages, nsh)
+        local = phys - i * c_loc
+        mine = (local >= 0) & (local < c_loc)
+        lc = jnp.clip(local, 0, c_loc - 1)
+        kp2 = jax.lax.dynamic_update_slice(
+            kp, kn[:, :, None, None, :].astype(kp.dtype), (0, 0, lc, off, 0))
+        vp2 = jax.lax.dynamic_update_slice(
+            vp, vn[:, :, None, None, :].astype(vp.dtype), (0, 0, lc, off, 0))
+        kp = jnp.where(mine, kp2, kp)
+        vp = jnp.where(mine, vp2, vp)
+        knf = kn.astype(jnp.float32)[:, :, None, :]
+        sl = lambda a: jax.lax.dynamic_slice(
+            a, (0, 0, lc, 0), (a.shape[0], a.shape[1], 1, a.shape[3]))
+        tmin2 = jax.lax.dynamic_update_slice(
+            tmin, jnp.minimum(sl(tmin), knf), (0, 0, lc, 0))
+        tmax2 = jax.lax.dynamic_update_slice(
+            tmax, jnp.maximum(sl(tmax), knf), (0, 0, lc, 0))
+        tmin = jnp.where(mine, tmin2, tmin)
+        tmax = jnp.where(mine, tmax2, tmax)
+        ps2 = jax.lax.dynamic_update_slice(
+            pstart,
+            jnp.broadcast_to(pg * p_sz, pstart.shape[:2])[:, :, None
+                                                          ].astype(jnp.int32),
+            (0, 0, lc))
+        pstart = jnp.where(mine, ps2, pstart)
+
+        # ---- selection (local score + distributed top-k) ----
+        if do_select:
+            scores_loc = paging.score_pages(
+                q, tmin, tmax, pstart, ctx, sink=h2.sink, local=h2.local,
+                page=p_sz, impl=spec.impl)          # (B, Hr, C_loc)
+            imp = paging.accumulate_importance(imp, scores_loc)
+            k_eff = min(h2.top_k_pages, c_loc)
+            v_loc, i_loc = jax.lax.top_k(scores_loc, k_eff)
+            phys_loc = i_loc + i * c_loc
+            v_all = jax.lax.all_gather(v_loc, axis)   # (nsh, B, Hr, k)
+            i_all = jax.lax.all_gather(phys_loc, axis)
+            bsz, hr = v_loc.shape[0], v_loc.shape[1]
+            v_cat = v_all.transpose(1, 2, 0, 3).reshape(bsz, hr, nsh * k_eff)
+            i_cat = i_all.transpose(1, 2, 0, 3).reshape(bsz, hr, nsh * k_eff)
+            sel_v, sel_pos = jax.lax.top_k(v_cat, min(h2.top_k_pages,
+                                                      nsh * k_eff))
+            sel = jnp.take_along_axis(i_cat, sel_pos, axis=2)
+            sel = jnp.where(sel_v > NEG_INF_HALF, sel, -1)
+            if sel.shape[2] < h2.top_k_pages:
+                pad = jnp.full(sel.shape[:2] + (h2.top_k_pages
+                                                - sel.shape[2],), -1,
+                               jnp.int32)
+                sel = jnp.concatenate([sel.astype(jnp.int32), pad], axis=2)
+            sel = sel.astype(jnp.int32)
+        else:
+            sel = sel_prev
+
+        # ---- attended slots (physical) + local partial attention ----
+        n_sink, n_local = paging.page_counts(sink=h2.sink, local=h2.local,
+                                             page=p_sz)
+        sink_log = jnp.arange(n_sink, dtype=jnp.int32)
+        first_local = jnp.maximum(ctx - h2.local, 0) // p_sz
+        local_log = first_local + jnp.arange(n_local, dtype=jnp.int32)
+        fixed_phys = paging.interleave_slot(
+            jnp.concatenate([sink_log, local_log]), cap_pages, nsh)
+        bsz, hr = q.shape[0], kp.shape[1]
+        fixed_phys = jnp.broadcast_to(fixed_phys,
+                                      (bsz, hr, fixed_phys.shape[0]))
+        slots_phys = jnp.concatenate(
+            [fixed_phys[:, :, :n_sink], sel, fixed_phys[:, :, n_sink:]],
+            axis=2)
+        loc = slots_phys - i * c_loc
+        mine_s = (slots_phys >= 0) & (loc >= 0) & (loc < c_loc)
+        loc_masked = jnp.where(mine_s, loc, -1)
+        gk, gv = paging.gather_pages(kp, vp, loc_masked)
+        valid = paging.token_validity(
+            loc_masked, pstart, ctx, sink=h2.sink, local=h2.local,
+            page=p_sz, top_k=h2.top_k_pages)
+        from repro.kernels.ref import paged_attention_partial_ref
+        m, l, o = paged_attention_partial_ref(q, gk, gv, valid)
+
+        # ---- cross-shard flash combine (the paper's cross-bank softmax) --
+        m_max = jax.lax.pmax(m, axis)
+        corr = jnp.where(jnp.isfinite(m),
+                         jnp.exp(m - jnp.where(jnp.isfinite(m_max), m_max,
+                                               0.0)), 0.0)
+        l_g = jax.lax.psum(l * corr, axis)
+        o_g = jax.lax.psum(o * corr[..., None].astype(o.dtype), axis)
+        out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+        return out, kp, vp, tmin, tmax, imp, pstart, sel
+
+    shard = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, cache5, cache5, cache4, cache4, cache3,
+                  cache3, P(bspec, None, None), P()),
+        out_specs=(rep, cache5, cache5, cache4, cache4, cache3, cache3,
+                   P(bspec, None, None)),
+        check_vma=False,
+    )
+    out, kpn, vpn, tminn, tmaxn, impn, pstartn, seln = shard(
+        q_r, k_r, v_r, paged.k_pages, paged.v_pages, paged.tau_min,
+        paged.tau_max, paged.importance, paged.page_start, paged.sel_idx,
+        length)
+    new_paged = cachelib.PagedCache(
+        k_pages=kpn, v_pages=vpn, tau_min=tminn, tau_max=tmaxn,
+        importance=impn, page_start=pstartn, sel_idx=seln)
+    return out, new_paged
+
+
+NEG_INF_HALF = -5e29
+
+
+def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
+                             length, *, do_select: bool, perm=None,
+                             axis: str = "model"):
+    """decode_attention with the retrieval heads under shard_map
+    co-placement. Streaming heads use the normal (tiny) path."""
+    from repro.runtime import hints
+
+    mesh = hints.current_mesh()
+    if mesh is None:
+        return decode_attention(spec, q, k_new, v_new, paged, stream,
+                                length, do_select=do_select, perm=perm)
+    h2 = spec.h2
+    g = spec.group
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    ctx = length + 1
+    outs = []
+    if nr > 0:
+        out_r, paged = _paged_decode_coplace(
+            spec, qp[:, : nr * g], kp[:, :nr], vp[:, :nr], paged, length,
+            do_select=do_select, mesh=mesh, axis=axis)
+        outs.append(out_r)
+    if spec.n_streaming > 0:
+        stream = cachelib.stream_cache_append(
+            stream, kp[:, nr:], vp[:, nr:], length, sink=h2.sink)
+        valid_s = (stream.pos >= 0) & (
+            (stream.pos < h2.sink) | (stream.pos >= ctx - h2.local))
+        outs.append(kops.paged_attention(
+            qp[:, nr * g:], stream.k, stream.v, valid_s, impl=spec.impl))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    out = _permute_q(out, _inverse_perm(perm), g)
+    return out, paged, stream
+
+
+# ---------------------------------------------------------------------------
+# Full-attention baseline (paper's "full attention" HB baseline)
+# ---------------------------------------------------------------------------
+
+
+def full_decode_attention(spec: AttnSpec, q, k_new, v_new,
+                          cache: cachelib.FullCache, length):
+    cache = cachelib.full_cache_append(cache, k_new, v_new, length)
+    pos = jnp.arange(cache.k.shape[2])
+    valid = pos[None, None, :] < (length + 1)
+    if spec.window > 0:
+        valid &= pos[None, None, :] > (length - spec.window)
+    valid = jnp.broadcast_to(valid, cache.k.shape[:3])
+    out = kops.paged_attention(q, cache.k, cache.v, valid, impl=spec.impl)
+    return out, cache

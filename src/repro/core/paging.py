@@ -1,0 +1,205 @@
+"""Page selection for retrieval heads (paper §IV-A.3).
+
+Two-step pipeline: (1) relevance score of every page from its min/max
+metadata, (2) top-k page selection. Selection is shared across
+``share_window`` consecutive queries (LServe).
+
+Consistent page partition (ctx = current context length; in the paper,
+tokens enter pages only when they pop out of the local FIFO, so pages and
+the local window never overlap — we express the same invariant with the
+position->page layout by anchoring the local section at the page boundary
+below ctx-local):
+
+  first_local = max((ctx - local) // P, 0)
+  sink section:     pages [0, n_sink): ALL in-context tokens (a superset of
+                    the configured sink count, rounded up to page boundary)
+  local section:    pages [first_local, first_local + n_local) with
+                    n_local = ceil(local/P)+1; tokens valid iff
+                    pos >= max(first_local, n_sink) * P
+  selected section: top-k over pages in [n_sink, first_local)
+
+Sink and local windows are therefore elastic by up to P-1 *extra* tokens
+(never fewer than configured — retrieval heads attend a superset; streaming
+heads use the exact sink/local counts). The three sections are mutually
+exclusive and their union covers every resident token when top-k spans all
+selectable pages — nothing is ever dropped at section boundaries or
+double-counted in the softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def page_counts(*, sink: int, local: int, page: int) -> tuple[int, int]:
+    """(n_sink_pages, n_local_pages) — static page counts always attended."""
+    n_sink = -(-sink // page) if sink else 0
+    n_local = -(-local // page) + 1 if local else 0  # +1 boundary page
+    return n_sink, n_local
+
+
+def _first_local_page(ctx: Array, *, local: int, page: int) -> Array:
+    return jnp.maximum(ctx - local, 0) // page
+
+
+def score_pages(
+    q: Array,
+    tau_min: Array,
+    tau_max: Array,
+    page_start: Array,
+    ctx: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+    impl: str = "ref",
+) -> Array:
+    """Relevance scores (B, Hkv, C); sink/local/empty pages forced to -inf."""
+    scores = kops.page_score(q, tau_min, tau_max, impl=impl)
+    n_sink, _ = page_counts(sink=sink, local=local, page=page)
+    first_local = _first_local_page(ctx, local=local, page=page)
+    pidx = jnp.where(page_start >= 0, page_start // page, -1)
+    selectable = (page_start >= 0) & (pidx >= n_sink) & (pidx < first_local)
+    return jnp.where(selectable, scores, NEG_INF)
+
+
+def select_pages(scores: Array, top_k: int) -> Array:
+    """Top-k page slots per (B, Hkv): (B, Hkv, K) int32.
+
+    If fewer than ``top_k`` pages exist, the selection is padded with -1
+    sentinels (masked downstream).
+    """
+    k_eff = min(top_k, scores.shape[-1])
+    _, idx = jax.lax.top_k(scores, k_eff)
+    idx = idx.astype(jnp.int32)
+    if k_eff < top_k:
+        pad = jnp.full(idx.shape[:-1] + (top_k - k_eff,), -1, jnp.int32)
+        idx = jnp.concatenate([idx, pad], axis=-1)
+    return idx
+
+
+def attended_page_slots(
+    sel_idx: Array,
+    ctx: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+) -> Array:
+    """Concatenate [sink pages | selected pages | local pages] slot indices.
+
+    Returns (B, Hkv, n_sink + K + n_local) int32. Assumes the no-eviction
+    layout where slot == page index == position // page. Out-of-range local
+    slots are clamped for gather safety; token_validity() masks them.
+    """
+    b, h, _ = sel_idx.shape
+    n_sink, n_local = page_counts(sink=sink, local=local, page=page)
+    sink_pages = jnp.broadcast_to(
+        jnp.arange(n_sink, dtype=jnp.int32), (b, h, n_sink))
+    first_local = _first_local_page(ctx, local=local, page=page)
+    local_pages = first_local + jnp.arange(n_local, dtype=jnp.int32)
+    local_pages = jnp.maximum(local_pages, 0)
+    local_pages = jnp.broadcast_to(local_pages, (b, h, n_local)).astype(jnp.int32)
+    return jnp.concatenate([sink_pages, sel_idx, local_pages], axis=2)
+
+
+def gather_pages(k_pages: Array, v_pages: Array, slots: Array):
+    """k/v_pages: (B, H, C, P, D); slots: (B, H, N) -> (B, H, N*P, D) each."""
+    b, h, c, p, d = k_pages.shape
+    n = slots.shape[2]
+    sc = jnp.maximum(slots, 0)[:, :, :, None, None]
+    k = jnp.take_along_axis(k_pages, sc, axis=2)
+    v = jnp.take_along_axis(v_pages, sc, axis=2)
+    return k.reshape(b, h, n * p, d), v.reshape(b, h, n * p, d)
+
+
+def token_validity(
+    slots: Array,
+    page_start: Array,
+    ctx: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+    top_k: int,
+) -> Array:
+    """Validity mask (B, H, N*P) for the gathered token buffer.
+
+    Enforces the section partition documented in the module docstring, so
+    the three sections never overlap even for degenerate selections (short
+    contexts where nothing is selectable yet).
+    """
+    b, h, n = slots.shape
+    n_sink, n_local = page_counts(sink=sink, local=local, page=page)
+    sentinel = (slots < 0)[:, :, :, None]
+    start = jnp.take_along_axis(page_start, jnp.maximum(slots, 0), axis=2)
+    offs = jnp.arange(page, dtype=jnp.int32)
+    pos = start[:, :, :, None] + offs[None, None, None, :]  # (B,H,N,P)
+    nonempty = (start >= 0)[:, :, :, None]
+    in_ctx = pos < ctx
+    section = jnp.concatenate([
+        jnp.zeros((n_sink,), jnp.int32),
+        jnp.ones((top_k,), jnp.int32),
+        jnp.full((n_local,), 2, jnp.int32),
+    ])
+    sec = section[None, None, :, None]
+    first_local = _first_local_page(ctx, local=local, page=page)
+    pidx = start // page
+    ok_sink = jnp.broadcast_to(True, pos.shape)  # whole sink page(s)
+    ok_local = (
+        (pos >= jnp.maximum(first_local, n_sink) * page)
+        & (pidx >= first_local)[:, :, :, None]
+    )
+    ok_sel = ((pidx >= n_sink) & (pidx < first_local))[:, :, :, None]
+    ok = jnp.where(sec == 0, ok_sink, jnp.where(sec == 2, ok_local, ok_sel))
+    return (nonempty & in_ctx & ok & ~sentinel).reshape(b, h, n * page)
+
+
+def accumulate_importance(importance: Array, scores: Array) -> Array:
+    """Paper: accumulate the computed relevance score at each step.
+
+    Scores of masked pages are NEG_INF; those contribute 0.
+    """
+    return importance + jnp.where(scores > NEG_INF / 2, scores, 0.0)
+
+
+def interleave_slot(page: Array, capacity: int, n_shards: int) -> Array:
+    """Physical cache slot for logical page index under interleaved
+    (round-robin) bank allocation (paper Fig 7b): owner shard = page mod
+    n_shards, so any top-k selection lands uniformly on all shards.
+
+    Identity when n_shards == 1. capacity must divide by n_shards.
+    """
+    if n_shards == 1:
+        return page
+    local_c = capacity // n_shards
+    return (page % n_shards) * local_c + page // n_shards
+
+
+def slots_of_positions(page_start: Array, positions: Array) -> Array:
+    """Pool-mode slot lookup: for each target page-start position, the
+    slot holding it (or -1). page_start: (B, H, C); positions: (N,) or
+    (B, H, N) -> (B, H, N) int32."""
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(
+            positions[None, None], page_start.shape[:2] + positions.shape)
+    eq = page_start[:, :, :, None] == positions[:, :, None, :]
+    slot = jnp.argmax(eq, axis=2).astype(jnp.int32)
+    found = jnp.any(eq, axis=2)
+    return jnp.where(found, slot, -1)
+
+
+def evict_lowest(cache_importance: Array, page_start: Array):
+    """Return per-(B,H) slot index of the lowest-importance *live* page.
+
+    Used by the fixed-pool (kv_budget) mode: the returned slot is overwritten
+    by the next page.
+    """
+    live = page_start >= 0
+    masked = jnp.where(live, cache_importance, jnp.inf)
+    return jnp.argmin(masked, axis=-1).astype(jnp.int32)

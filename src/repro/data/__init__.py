@@ -1,0 +1,1 @@
+from repro.data.pipeline import lm_batch, niah_batch, token_stream  # noqa: F401

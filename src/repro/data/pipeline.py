@@ -1,0 +1,84 @@
+"""Deterministic, seekable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — a crashed run restarted
+from a checkpoint at step N regenerates exactly the batches it would have
+seen, with no data-loader state to persist. Shardable: the global batch is
+generated whole and sharded by the caller's in_shardings (device layout
+never changes the stream).
+
+Two generators:
+  lm_batch        — zipf-distributed token stream with local n-gram
+                    structure (so a small model has something to learn).
+  niah_batch      — Needle-in-a-Haystack: a (key, value) pair is planted at
+                    a controlled depth inside filler; the model is queried
+                    for the value at the end. Used by the accuracy
+                    benchmarks (paper Fig 13 proxy).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _keys(seed: int, step: int, n: int):
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.split(k, n)
+
+
+@partial(jax.jit, static_argnames=("batch", "seq", "vocab", "seed"))
+def lm_batch(step: Array, *, batch: int, seq: int, vocab: int,
+             seed: int = 0):
+    """Returns {tokens (B,S) int32, labels (B,S) int32}.
+
+    Structure: zipf-ish unigram draw mixed with a first-order recurrence
+    (token_t depends on token_{t-1}) so cross-entropy is reducible.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # zipf via inverse-cdf on uniform
+    u = jax.random.uniform(k1, (batch, seq), minval=1e-6, maxval=1.0)
+    base = (jnp.exp(-jnp.log(u) * 0.35) - 1.0)
+    base = jnp.clip(base.astype(jnp.int32), 0, vocab - 1)
+    # first-order structure: with p=0.5 token_t = f(token_{t-1})
+    mix = jax.random.bernoulli(k2, 0.5, (batch, seq))
+    shifted = jnp.roll(base, 1, axis=1)
+    det = (shifted * 31 + 7) % vocab
+    tokens = jnp.where(mix, det, base)
+    labels = jnp.roll(tokens, -1, axis=1).at[:, -1].set(-100)
+    return {"tokens": tokens, "labels": labels}
+
+
+@partial(jax.jit,
+         static_argnames=("batch", "seq", "vocab", "depth_frac", "seed"))
+def niah_batch(step: Array, *, batch: int, seq: int, vocab: int,
+               depth_frac: float = 0.5, seed: int = 0):
+    """Needle-in-a-haystack probe batches.
+
+    Layout per row:  [filler ... K V ... filler ... K] -> next token = V.
+    K is drawn from a reserved key alphabet [vocab-64, vocab-32); V from
+    [vocab-32, vocab). Returns tokens, the answer V (B,), and the needle
+    position.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    filler = jax.random.randint(k1, (batch, seq), 0, max(vocab - 64, 1))
+    kk = jax.random.randint(k2, (batch,), vocab - 64, vocab - 32)
+    vv = jax.random.randint(k3, (batch,), vocab - 32, vocab)
+    pos = int(seq * depth_frac)
+    pos = min(max(pos, 0), seq - 3)
+    tokens = filler.at[:, pos].set(kk).at[:, pos + 1].set(vv)
+    tokens = tokens.at[:, -1].set(kk)  # query: repeat the key
+    return {"tokens": tokens, "answer": vv, "needle_pos": pos}
+
+
+def token_stream(*, batch: int, seq: int, vocab: int, seed: int = 0):
+    """Infinite iterator over lm_batch steps (host-side convenience)."""
+    step = 0
+    while True:
+        yield lm_batch(jnp.int32(step), batch=batch, seq=seq, vocab=vocab,
+                       seed=seed)
+        step += 1

@@ -1,0 +1,7 @@
+from repro.hbsim.sim import (  # noqa: F401
+    HBConfig,
+    MODES,
+    attention_decode,
+    e2e_decode,
+    gemm_decode,
+)

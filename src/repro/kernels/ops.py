@@ -1,0 +1,45 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selects the backend:
+  "ref"    — pure-jnp oracle (kernels/ref.py). Used for CPU tests and for
+             the multi-pod dry-run (native HLO is what GSPMD partitions and
+             what cost_analysis models).
+  "kernel" — Pallas TPU kernel (pl.pallas_call). On non-TPU backends the
+             wrappers run the kernel in interpret mode so correctness is
+             testable everywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, sink=0, q_offset=0,
+                    impl="ref"):
+    if impl == "ref":
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, sink=sink, q_offset=q_offset)
+    from repro.kernels import flash_attention as fk
+    return fk.flash_attention(
+        q, k, v, causal=causal, window=window, sink=sink, q_offset=q_offset,
+        interpret=_INTERPRET)
+
+
+def paged_attention(q, k, v, valid, *, impl="ref"):
+    if impl == "ref":
+        return _ref.paged_attention_ref(q, k, v, valid)
+    from repro.kernels import paged_attention as pk
+    return pk.paged_attention(q, k, v, valid, interpret=_INTERPRET)
+
+
+def page_score(q, tau_min, tau_max, *, impl="ref"):
+    if impl == "ref":
+        return _ref.page_score_ref(q, tau_min, tau_max)
+    from repro.kernels import page_score as sk
+    return sk.page_score(q, tau_min, tau_max, interpret=_INTERPRET)

@@ -1,0 +1,98 @@
+"""Pallas TPU decode attention over a gathered (compacted) KV buffer.
+
+The top-k page gather happens outside (a sharded XLA gather — on TPU a
+scalar-prefetch in-kernel gather buys nothing for this access pattern since
+whole pages are contiguous). The kernel streams the compacted KV through
+VMEM in (BT, D) tiles with online softmax; q is the (G, D) GQA group,
+resident in VMEM for the whole program — this mirrors the paper's
+"sink+local in logic-die SRAM" co-design: the hot operand stays on-die
+while KV streams past it.
+
+Layout: q (BH, G, D); kv (BH, T, D); valid (BH, T) -> out (BH, G, D),
+where BH = B * Hkv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bt, seq_t):
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = ti * bt + jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+    inb = rows < seq_t
+    k = jnp.where(inb, k_ref[0].astype(jnp.float32), 0.0)   # (BT, D)
+    v = jnp.where(inb, v_ref[0].astype(jnp.float32), 0.0)   # (BT, D)
+    ok = inb[:, 0] & (valid_ref[0] != 0)                     # (BT,)
+    q = q_ref[0].astype(jnp.float32)                         # (G, D)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, BT)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok[None, :], p, 0.0)  # all-masked tile: exp(-inf - -inf)=1
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def paged_attention(q, k, v, valid, *, bt=512, interpret=False):
+    """q: (B, Hq, D); k/v: (B, Hkv, T, D); valid: (B, Hkv, T) bool.
+
+    Returns (B, Hq, D). Matches kernels.ref.paged_attention_ref.
+    """
+    b, hq, d = q.shape
+    h_kv, t = k.shape[1], k.shape[2]
+    g = hq // h_kv
+    qg = q.reshape(b * h_kv, g, d)
+    kt = k.reshape(b * h_kv, t, d)
+    vt = v.reshape(b * h_kv, t, d)
+    vd = valid.reshape(b * h_kv, t).astype(jnp.int32)
+
+    bt_ = min(bt, t)
+    nt = pl.cdiv(t, bt_)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bt=bt_, seq_t=t),
+        grid=(b * h_kv, nt),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
+            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
+            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
+            pl.BlockSpec((1, bt_), lambda bh, ti: (bh, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, vd)
+    return out.reshape(b, hq, d)

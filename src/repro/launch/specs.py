@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input — no allocation.
+
+``input_specs(arch, shape)`` returns what the lowered step functions take:
+  train:   {"tokens": (B,S), "labels": (B,S)}   (embeds for stub archs)
+  prefill: batch (B,S) (or embeds)
+  decode:  token (B,) (or (B, F)) — the serve state comes from
+           jax.eval_shape(prefill) (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embed_frontend_stub:
+        batch = SDS((b, s, cfg.frontend_dim), dtype)
+    else:
+        batch = SDS((b, s), jnp.int32)
+    return {"tokens": batch, "labels": SDS((b, s), jnp.int32)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embed_frontend_stub:
+        return SDS((b, s, cfg.frontend_dim), dtype)
+    return SDS((b, s), jnp.int32)
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       dtype=jnp.bfloat16):
+    b = shape.global_batch
+    if cfg.embed_frontend_stub:
+        return SDS((b, cfg.frontend_dim), dtype)
+    return SDS((b,), jnp.int32)
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    from repro.models import model as M
+
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k, dtype=dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))

@@ -1,0 +1,189 @@
+"""Top-level model API: init / forward (train) / prefill / decode_step.
+
+All functions are pure and jit-friendly; ``cfg`` is static. The layer
+stack runs as ``lax.scan`` over periods (see transformer.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models.layers import rms_norm, rope_cos_sin
+
+Array = jax.Array
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    return T.init_params(cfg, key, dtype)
+
+
+def default_plan(cfg: ArchConfig):
+    return T.default_plan(cfg)
+
+
+def embed_input(cfg: ArchConfig, params, batch) -> Array:
+    """batch: (B,S) int32 tokens, or (B,S,frontend_dim) embeddings for
+    frontend-stub archs (vlm/audio)."""
+    if cfg.embed_frontend_stub:
+        return batch  # precomputed frame/patch embeddings
+    return jnp.take(params["embed"], batch, axis=0)
+
+
+def unembed(cfg: ArchConfig, params, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"])
+    return jnp.einsum("...d,dv->...v", x, params["lm_head"])
+
+
+def _rope(cfg: ArchConfig, positions: Array):
+    return rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, batch, *, plan=None, impl: str = "ref",
+            alpha: Array | None = None, remat: bool = False) -> Array:
+    """Full-sequence forward -> logits (B, S, V).
+
+    alpha: (num_layers, Hkv) gating parameters for head-identification
+    training (None = plain attention).
+    """
+    plan = plan if plan is not None else T.default_plan(cfg)
+    x = embed_input(cfg, params, batch)
+    s = x.shape[1]
+    rope = _rope(cfg, jnp.arange(s))
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    if alpha is not None:
+        alpha_blocks = alpha[: n_per * p_len].reshape(n_per, p_len, -1)
+    else:
+        alpha_blocks = None
+
+    def period_fn(x, xs):
+        params_p, plan_p, alpha_p = xs
+        for pos in range(p_len):
+            a = alpha_p[pos] if alpha_p is not None else None
+            x = T.block_train(cfg, pos, params_p[f"pos{pos}"],
+                              plan_p[f"pos{pos}"], x, rope, impl=impl,
+                              alpha=a)
+        return x, ()
+
+    body = jax.checkpoint(period_fn) if remat else period_fn
+    if n_per > 0:
+        xs = (params["blocks"], plan["blocks"], alpha_blocks)
+        x, _ = jax.lax.scan(lambda c, s_: body(c, s_), x, xs)
+    for r in range(n_rem):
+        a = alpha[n_per * p_len + r] if alpha is not None else None
+        x = T.block_train(cfg, r, params["rem"][f"rem{r}"],
+                          plan["rem"][f"rem{r}"], x, rope, impl=impl, alpha=a)
+    return unembed(cfg, params, x)
+
+
+def lm_loss(cfg: ArchConfig, params, batch, labels, *, plan=None,
+            impl: str = "ref", alpha=None, remat: bool = True) -> Array:
+    """Mean next-token cross-entropy. labels: (B, S) int32 (-100 = pad)."""
+    logits = forward(cfg, params, batch, plan=plan, impl=impl, alpha=alpha,
+                     remat=remat)
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ArchConfig, params, batch, *, capacity: int, plan=None,
+            impl: str = "ref", layout=None):
+    """Process the prompt; returns (last-token logits, ServeState)."""
+    plan = plan if plan is not None else T.default_plan(cfg)
+    x = embed_input(cfg, params, batch)
+    s = x.shape[1]
+    rope = _rope(cfg, jnp.arange(s))
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    def period_fn(x, xs):
+        params_p, plan_p = xs
+        caches = {}
+        for pos in range(p_len):
+            x, c = T.block_prefill(cfg, pos, params_p[f"pos{pos}"],
+                                   plan_p[f"pos{pos}"], x, rope,
+                                   capacity=capacity, impl=impl,
+                                   layout=layout)
+            caches[f"pos{pos}"] = c
+        return x, caches
+
+    state: dict[str, Any] = {"length": jnp.int32(s), "blocks": {}, "rem": {}}
+    if n_per > 0:
+        x, caches = jax.lax.scan(
+            period_fn, x, (params["blocks"], plan["blocks"]))
+        state["blocks"] = caches
+    for r in range(n_rem):
+        x, c = T.block_prefill(cfg, r, params["rem"][f"rem{r}"],
+                               plan["rem"][f"rem{r}"], x, rope,
+                               capacity=capacity, impl=impl, layout=layout)
+        state["rem"][f"rem{r}"] = c
+    logits = unembed(cfg, params, x[:, -1])
+    return logits, state
+
+
+def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
+                do_select: bool = True, impl: str = "ref", layout=None):
+    """One decode step.
+
+    token: (B,) int32 (or (B, frontend_dim) embeddings for stub archs).
+    Returns (logits (B, V), new state).
+    """
+    plan = plan if plan is not None else T.default_plan(cfg)
+    length = state["length"]
+    if cfg.embed_frontend_stub:
+        x = token
+    else:
+        x = jnp.take(params["embed"], token, axis=0)
+    rope1 = _rope(cfg, length[None])  # (1, half) at position `length`
+    rope1 = (rope1[0][None], rope1[1][None])  # (1, 1, half) broadcast form
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    def period_fn(x, xs):
+        params_p, plan_p, cache_p = xs
+        new_caches = {}
+        for pos in range(p_len):
+            x, c = T.block_decode(cfg, pos, params_p[f"pos{pos}"],
+                                  plan_p[f"pos{pos}"], x, rope1,
+                                  cache_p[f"pos{pos}"], length=length,
+                                  do_select=do_select, impl=impl,
+                                  layout=layout)
+            new_caches[f"pos{pos}"] = c
+        return x, new_caches
+
+    new_state: dict[str, Any] = {"length": length + 1, "blocks": {},
+                                 "rem": {}}
+    if n_per > 0:
+        x, caches = jax.lax.scan(
+            period_fn, x,
+            (params["blocks"], plan["blocks"], state["blocks"]))
+        new_state["blocks"] = caches
+    for r in range(n_rem):
+        x, c = T.block_decode(cfg, r, params["rem"][f"rem{r}"],
+                              plan["rem"][f"rem{r}"], x, rope1,
+                              state["rem"][f"rem{r}"], length=length,
+                              do_select=do_select, impl=impl, layout=layout)
+        new_state["rem"][f"rem{r}"] = c
+    logits = unembed(cfg, params, x)
+    return logits, new_state

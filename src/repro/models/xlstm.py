@@ -1,0 +1,202 @@
+"""xLSTM blocks (sLSTM + mLSTM) — arXiv:2405.04517, simplified faithfully.
+
+Both blocks use exponential gating with the max-stabilizer state m_t, so
+the recurrence is numerically exact in f32. Training/prefill run the same
+recurrence under ``lax.scan`` (sLSTM is inherently sequential — its
+recurrent weights R forbid a parallel form; mLSTM is kept scan-based too,
+which keeps HLO compact; decode is O(1)/token for both — the property that
+matters for the long-context serving shapes).
+
+mLSTM (matrix memory, heads H, key/value dim P = d_model/H):
+    C_t = f_t · C_{t-1} + i_t · (k_t v_tᵀ)      C: (P, P)
+    n_t = f_t · n_{t-1} + i_t · k_t
+    h_t = o_t ⊙ (C_tᵀ q_t) / max(|n_tᵀ q_t|, 1)
+
+sLSTM (scalar memory per head-channel, recurrent gate inputs):
+    c_t = f_t ⊙ c_{t-1} + i_t ⊙ z_t,  n_t = f_t ⊙ n_{t-1} + i_t
+    h_t = o_t ⊙ c_t / n_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense, rms_norm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_qkv": init_dense(ks[0], d, 3 * d, dtype=dtype),
+        "w_if": init_dense(ks[1], d, 2 * h, dtype=dtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+                                ).astype(jnp.float32),
+        "w_o": init_dense(ks[2], d, d, dtype=dtype),
+        "norm_w": jnp.zeros((d,), dtype),
+        "out_proj": init_dense(ks[3], d, d, dtype=dtype),
+    }
+
+
+def _mlstm_gates(params, x):
+    """x: (..., d) -> (i_tilde, f_tilde) each (..., H) in f32."""
+    g = dense(x, params["w_if"]).astype(jnp.float32) + params["b_if"]
+    h = g.shape[-1] // 2
+    return g[..., :h], g[..., h:]
+
+
+def init_mlstm_state(cfg: ArchConfig, bsz: int):
+    h = cfg.num_heads
+    p = cfg.d_model // h
+    return {
+        "C": jnp.zeros((bsz, h, p, p), jnp.float32),
+        "n": jnp.zeros((bsz, h, p), jnp.float32),
+        "m": jnp.full((bsz, h), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_update(state, q, k, v, it, ft):
+    """One stabilized step. q/k/v: (B,H,P) f32; it/ft: (B,H)."""
+    m_new = jnp.maximum(ft + state["m"], it)
+    m_prev_finite = jnp.isfinite(state["m"])
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.where(m_prev_finite, jnp.exp(ft + state["m"] - m_new), 0.0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    C = f_p[..., None, None] * state["C"] + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_p[..., None] * state["n"] + i_p[..., None] * k
+    hq = jnp.einsum("bhpq,bhp->bhq", C, q * scale)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q * scale)), 1.0)
+    h_t = hq / denom[..., None]
+    return {"C": C, "n": n, "m": m_new}, h_t
+
+
+def mlstm_forward(cfg: ArchConfig, params, x: Array) -> Array:
+    """x: (B, L, d) -> (B, L, d) via scan over time."""
+    b, L, d = x.shape
+    h = cfg.num_heads
+    p = d // h
+    qkv = dense(x, params["w_qkv"]).astype(jnp.float32)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    it, ft = _mlstm_gates(params, x)
+    o = jax.nn.sigmoid(dense(x, params["w_o"]).astype(jnp.float32))
+
+    def step(state, inp):
+        qt, kt, vt, i_t, f_t = inp
+        state, h_t = _mlstm_update(
+            state,
+            qt.reshape(b, h, p), kt.reshape(b, h, p), vt.reshape(b, h, p),
+            i_t, f_t)
+        return state, h_t
+
+    s0 = init_mlstm_state(cfg, b)
+    xs = (q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2),
+          it.transpose(1, 0, 2), ft.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(step, s0, xs)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, L, d)
+    y = (o * hs).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"])
+
+
+def mlstm_step(cfg: ArchConfig, params, state, x: Array):
+    """x: (B, d) -> (y (B, d), state')."""
+    b, d = x.shape
+    h = cfg.num_heads
+    p = d // h
+    qkv = dense(x, params["w_qkv"]).astype(jnp.float32)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    it, ft = _mlstm_gates(params, x)
+    o = jax.nn.sigmoid(dense(x, params["w_o"]).astype(jnp.float32))
+    state, h_t = _mlstm_update(
+        state, q.reshape(b, h, p), k.reshape(b, h, p), v.reshape(b, h, p),
+        it, ft)
+    y = (o * h_t.reshape(b, d)).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"]), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    p = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "w": init_dense(ks[0], d, 4 * d, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (h, p, 4 * p)) / jnp.sqrt(p)
+              ).astype(dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm_w": jnp.zeros((d,), dtype),
+        "out_proj": init_dense(ks[2], d, d, dtype=dtype),
+    }
+
+
+def init_slstm_state(cfg: ArchConfig, bsz: int):
+    d = cfg.d_model
+    h = cfg.num_heads
+    p = d // h
+    return {
+        "c": jnp.zeros((bsz, h, p), jnp.float32),
+        "n": jnp.zeros((bsz, h, p), jnp.float32),
+        "m": jnp.full((bsz, h, p), -jnp.inf, jnp.float32),
+        "h": jnp.zeros((bsz, h, p), jnp.float32),
+    }
+
+
+def _slstm_step_inner(cfg, params, state, wx):
+    """wx: (B, 4d) precomputed W x_t. Returns (state', h_t (B,H,P))."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    p = d // h
+    b = wx.shape[0]
+    rh = jnp.einsum("bhp,hpq->bhq", state["h"], params["r"].astype(jnp.float32))
+    g = wx.astype(jnp.float32).reshape(b, h, 4 * p) + rh + \
+        params["b"].reshape(h, 4 * p)
+    z_t, i_t, f_t, o_t = jnp.split(g, 4, axis=-1)
+    z_t = jnp.tanh(z_t)
+    o_t = jax.nn.sigmoid(o_t)
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    finite = jnp.isfinite(state["m"])
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.where(finite, jnp.exp(f_t + state["m"] - m_new), 0.0)
+    c = f_p * state["c"] + i_p * z_t
+    n = f_p * state["n"] + i_p
+    h_t = o_t * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h_t}, h_t
+
+
+def slstm_forward(cfg: ArchConfig, params, x: Array) -> Array:
+    b, L, d = x.shape
+    wx = dense(x, params["w"])
+
+    def step(state, wxt):
+        return _slstm_step_inner(cfg, params, state, wxt)
+
+    s0 = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(step, s0, wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, L, d).astype(x.dtype)
+    y = rms_norm(hs, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"])
+
+
+def slstm_step(cfg: ArchConfig, params, state, x: Array):
+    wx = dense(x, params["w"])
+    state, h_t = _slstm_step_inner(cfg, params, state, wx)
+    b, d = x.shape
+    y = h_t.reshape(b, d).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"]), state

@@ -1,0 +1,52 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two mechanisms:
+  * bf16 gradients — halves all-reduce bytes; applied by casting grads
+    before the (GSPMD-inserted) reduction. Safe default at scale.
+  * int8 + error feedback — 4x compression; quantize(g + e) per leaf with
+    a per-leaf scale, carry the quantization error e into the next step.
+    Used with an explicit shard_map psum (runtime/train.py, optional) so
+    the wire format is actually int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def to_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                        params)
+
+
+def quantize_int8(g: jax.Array):
+    """Symmetric per-tensor int8. Returns (q int8, scale f32)."""
+    g = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, errors):
+    """Returns (quantized pytree of (q, scale), new_errors)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return (q, s), corrected - deq
+
+    flat = jax.tree.map(one, grads, errors,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    qtree = jax.tree.map(lambda pair: pair[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    etree = jax.tree.map(lambda pair: pair[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return qtree, etree

@@ -1,0 +1,348 @@
+"""Post-partitioning HLO statistics for the roofline analysis.
+
+collective_bytes: parsed from ``compiled.as_text()`` — sums the result
+sizes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` variants counted once, ``-done``
+skipped). Result size is the wire-visible payload per device; ring-factor
+adjustments (×2 for all-reduce, ×(n-1)/n for gather/scatter) are applied
+in the roofline model, not here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9_,\[\]{}\s/#*]+?\)?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<variant>-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op: {"count": int, "bytes": int}} + {"total_bytes": int}."""
+    stats: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("variant") == "-done":
+            continue
+        op = m.group("op")
+        b = _type_bytes(m.group("type"))
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += b
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_bytes"] = sum(v["bytes"] for v in stats.values())
+    return out
+
+
+_LINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.+)$")
+_RESULT_TYPE_RE = re.compile(
+    r"^(\(?(?:[a-z][a-z0-9]*\[[0-9,]*\][^\s,)]*(?:,\s*)?)+\)?)")
+_CONVERT_FUSION = re.compile(r"calls=%?\w*convert\w*")
+
+
+def convert_overhead_bytes(hlo_text: str) -> int:
+    """Traffic of large cross-precision converts (CPU float normalization;
+    absent on TPU where bf16 is MXU-native). XLA:CPU upcasts bf16 compute
+    to f32 and hoists the converts out of loops, charging whole caches at
+    3x their real size — this returns those bytes so the roofline memory
+    term can be corrected. Only MB-scale converts are counted."""
+    defs: dict = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        tm = _RESULT_TYPE_RE.match(rest)
+        if tm:
+            defs[name] = _type_bytes(tm.group(1))
+    total = 0
+    scope = ""
+    comp_hdr = re.compile(r"^\s*%?([\w.-]+)\s+\([^)]*")
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        if s.endswith("{") and "=" not in s.split("{")[0]:
+            m = comp_hdr.match(s)
+            scope = m.group(1) if m else ""
+            continue
+        if s == "}":
+            scope = ""
+            continue
+        # skip instruction lines inside fusion bodies: their converts are
+        # accounted through the fusion call line instead
+        in_fusion_body = "computation" in scope
+        is_conv = " convert(" in line and not in_fusion_body
+        is_conv_fusion = "fusion(" in line and _CONVERT_FUSION.search(line)
+        if not (is_conv or is_conv_fusion):
+            continue
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        out_b = defs.get(name, 0)
+        args = re.search(r"(?:convert|fusion)\(([^)]*)\)", rest)
+        in_b = (sum(defs.get(r, 0)
+                    for r in re.findall(r"%([\w.-]+)", args.group(1)))
+                if args else 0)
+        if out_b >= 1 << 20:
+            total += out_b + in_b
+    return total
+
+
+def _parse_computations(hlo_text: str):
+    """{comp_name: [(opcode, out_bytes, [operand_names...], raw_line)]}.
+
+    Also returns defs: {instr_name: out_bytes} and shapes:
+    {instr_name: [(dtype, dims), ...]} and the ENTRY computation name.
+    """
+    comps: dict = {}
+    defs: dict = {}
+    shapes: dict = {}
+    entry = None
+    scope = None
+    pending_hdr = None  # (name, is_entry) of a header wrapping over lines
+    comp_hdr = re.compile(r"^\s*(ENTRY\s+)?%?([\w.$-]+)\s+\(")
+    op_re = re.compile(r"\]\S*\s+([a-z][a-z0-9-]*)\(")
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        if pending_hdr is not None:
+            if s.endswith("{"):
+                scope, is_entry = pending_hdr
+                comps.setdefault(scope, [])
+                if is_entry:
+                    entry = scope
+                pending_hdr = None
+            continue
+        # computation headers have no " = " before the param list and may
+        # wrap across many lines when the parameter tuple is long
+        if " = " not in s.split("(")[0]:
+            m = comp_hdr.match(s)
+            if m and "=" not in s[: m.end()]:
+                if s.endswith("{"):
+                    scope = m.group(2)
+                    comps.setdefault(scope, [])
+                    if m.group(1):
+                        entry = scope
+                else:
+                    pending_hdr = (m.group(2), bool(m.group(1)))
+                continue
+        if s == "}":
+            scope = None
+            continue
+        m = _LINE_RE.match(line)
+        if not m or scope is None:
+            continue
+        name, rest = m.groups()
+        tm = _RESULT_TYPE_RE.match(rest)
+        out_b = _type_bytes(tm.group(1)) if tm else 0
+        defs[name] = out_b
+        if tm:
+            shapes[name] = [
+                (dt, [int(x) for x in dims.split(",") if x])
+                for dt, dims in _SHAPE_RE.findall(tm.group(1))]
+        om = op_re.search(rest)
+        opcode = om.group(1) if om else ""
+        args = re.search(r"\(([^)]*)\)", rest[rest.find(opcode):] if opcode
+                         else "")
+        ops = (re.findall(r"%([\w.-]+)", args.group(1)) if args else [])
+        comps[scope].append((opcode, out_b, ops, rest))
+    return comps, defs, shapes, entry
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]{0,10}(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+
+
+def computation_multiplicities(hlo_text: str):
+    """Execution count of each computation, multiplying while-loop trip
+    counts through the call graph (fusion/call/cond bodies inherit the
+    caller's multiplicity)."""
+    comps, defs, shapes, entry = _parse_computations(hlo_text)
+    mult = {name: 0 for name in comps}
+    if entry is None:
+        # fall back: first computation
+        entry = next(iter(comps), None)
+    if entry is None:
+        return comps, defs, shapes, {}
+    # BFS accumulation
+    pending = [(entry, 1)]
+    while pending:
+        name, m = pending.pop()
+        if name not in comps:
+            continue
+        mult[name] = mult.get(name, 0) + m
+        for opcode, _, _, raw in comps[name]:
+            children = []
+            trip = 1
+            if opcode == "while":
+                t = _TRIP_RE.search(raw)
+                trip = int(t.group(1)) if t else 1
+                bm = _BODY_RE.search(raw)
+                cm = _COND_RE.search(raw)
+                if bm:
+                    children.append(bm.group(1))
+                if cm:
+                    children.append(cm.group(1))
+            else:
+                for rex in (_CALLS_RE, _APPLY_RE):
+                    mm = rex.search(raw)
+                    if mm:
+                        children.append(mm.group(1))
+                bb = _BRANCHES_RE.search(raw)
+                if bb:
+                    children.extend(
+                        re.findall(r"%?([\w.-]+)", bb.group(1)))
+            for c in children:
+                if c in comps:
+                    pending.append((c, m * trip))
+    return comps, defs, shapes, mult
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def flops_with_trips(hlo_text: str) -> float:
+    """Total dot FLOPs with while-trip multiplication (XLA's own
+    cost_analysis counts each loop body exactly once — useless for
+    scan-over-layers programs)."""
+    comps, defs, shapes, mult = computation_multiplicities(hlo_text)
+    total = 0.0
+    for name, instrs in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for opcode, _, ops, raw in instrs:
+            if opcode != "dot":
+                continue
+            tm = _RESULT_TYPE_RE.match(raw)
+            if not tm:
+                continue
+            out_shapes = _SHAPE_RE.findall(tm.group(1))
+            out_elems = 1
+            for _, dims in out_shapes:
+                for d in dims.split(","):
+                    if d:
+                        out_elems *= int(d)
+            # contraction size from the lhs operand's shape
+            cm = _CONTRACT_RE.search(raw)
+            k = 1
+            if cm and ops:
+                lhs = shapes.get(ops[0])
+                if lhs:
+                    dims = lhs[0][1]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            k *= dims[int(idx)]
+            total += 2.0 * out_elems * k * m
+    return total
+
+
+def collective_stats_with_trips(hlo_text: str) -> dict:
+    """Like collective_stats but multiplied by loop trip counts."""
+    comps, defs, shapes, mult = computation_multiplicities(hlo_text)
+    stats: dict = {}
+    for name, instrs in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for opcode, out_b, ops, raw in instrs:
+            base = None
+            for c in _COLLECTIVES:
+                if opcode == c or opcode == c + "-start":
+                    base = c
+                    break
+            if base is None:
+                continue
+            d = stats.setdefault(base, {"count": 0, "bytes": 0})
+            d["count"] += m
+            d["bytes"] += out_b * m
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if k != "total_bytes")
+    return stats
+
+
+def gather_overhead_bytes(hlo_text: str) -> int:
+    """XLA's cost model charges gather at FULL operand size; real hardware
+    (and the paper's entire premise) touches only the gathered bytes. This
+    returns sum over gathers of (operand - 2*output) bytes, multiplied by
+    the enclosing while loop's known trip count, so diagnostics can show
+    what a paged-attention DMA actually moves."""
+    comps, defs, shapes, mult = computation_multiplicities(hlo_text)
+    total = 0
+    for name, instrs in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for opcode, out_b, ops, _ in instrs:
+            if opcode != "gather":
+                continue
+            opnd = max((defs.get(o, 0) for o in ops), default=0)
+            over = opnd - 2 * out_b
+            if over > 0:
+                total += over * m
+    return total
+
+
+def cost_stats(compiled) -> dict:
+    """flops / bytes from compiled.cost_analysis(), tolerant of backends."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

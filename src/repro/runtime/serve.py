@@ -1,0 +1,71 @@
+"""Serving step builders: prefill + decode with H²EAL layouts.
+
+The decode step comes in two compiled variants (select / reuse) realizing
+the paper's shared page selection: the serving loop calls the `select`
+variant every ``share_window`` steps and the cheaper `reuse` variant in
+between — no lax.cond, so each variant's HLO (and roofline) is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.runtime import sharding as shardlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    capacity: int                 # max context tokens the cache holds
+    layout: str | None = None     # None = auto (see state_shardings)
+    impl: str = "ref"
+
+
+def make_prefill(cfg: ArchConfig, scfg: ServeConfig):
+    def prefill(params, batch):
+        return M.prefill(cfg, params, batch, capacity=scfg.capacity,
+                         impl=scfg.impl, layout=scfg.layout)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, scfg: ServeConfig, *, do_select: bool):
+    def decode(params, state, token):
+        return M.decode_step(cfg, params, state, token,
+                             do_select=do_select, impl=scfg.impl,
+                             layout=scfg.layout)
+    return decode
+
+
+def jit_serve_steps(cfg: ArchConfig, scfg: ServeConfig, mesh: Mesh, params,
+                    state, batch_size: int):
+    """Returns (prefill_fn, decode_select_fn, decode_reuse_fn) jitted with
+    explicit shardings."""
+    ps = shardlib.param_shardings(cfg, mesh, params, mode="serve")
+    ss = shardlib.state_shardings(cfg, mesh, state, layout=scfg.layout,
+                                  batch_size=batch_size)
+    bs = shardlib.batch_sharding(mesh, batch_size)
+    scalar = NamedSharding(mesh, P())
+
+    prefill = jax.jit(
+        make_prefill(cfg, scfg),
+        in_shardings=(ps, bs),
+        out_shardings=(bs, ss),
+    )
+    dec_sel = jax.jit(
+        make_decode_step(cfg, scfg, do_select=True),
+        in_shardings=(ps, ss, bs),
+        out_shardings=(bs, ss),
+        donate_argnums=(1,),
+    )
+    dec_reuse = jax.jit(
+        make_decode_step(cfg, scfg, do_select=False),
+        in_shardings=(ps, ss, bs),
+        out_shardings=(bs, ss),
+        donate_argnums=(1,),
+    )
+    return prefill, dec_sel, dec_reuse

@@ -1,0 +1,241 @@
+"""Sharding rules: how H²EAL's bank placement maps onto the TPU mesh.
+
+Mesh axes: ``("data","model")`` single pod (16x16), ``("pod","data","model")``
+multi-pod. ``pod`` composes with ``data`` for batch sharding (DP across
+pods — DCN-crossing collectives stay in the gradient/batch reduction).
+
+Parameters are 2D-sharded (TP over ``model`` on the contraction-output
+dim, FSDP/ZeRO over ``data`` on the other dim) so even kimi-k2 (1T params)
+fits per-device HBM. Experts shard E over ``model`` plus an inner dim over
+``data`` (EP x TP).
+
+Serve-cache layouts (the paper's §IV-B mapped to mesh axes):
+
+  head       — baseline "head parallelism": kv-heads → model, batch → data.
+               (the paper's basic HB implementation, Fig 3a)
+  coplace    — memory-compute co-placement: pages (C dim) → model, so each
+               device owns whole pages and computes partial attention for
+               the pages it stores; batch → data.
+  interleave — co-placement + interleaved storage: pages → model AND the
+               within-page token dim (P) → data: every page is striped
+               across the data axis, so any top-k selection lands uniformly
+               on all devices (paper Fig 7b). Default for long_500k where
+               batch cannot feed the mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def _axis(mesh: Mesh, name: str):
+    return name if name in mesh.axis_names else None
+
+
+def batch_axes(mesh: Mesh):
+    """Axes for the global-batch dim: ('pod','data') when pod exists."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axes if isinstance(axes, tuple) else (axes,))]))
+    return n % size == 0
+
+
+# params whose (p, m, v) f32 optimizer footprint fits TP-only per device
+# skip FSDP entirely — ZeRO-3 weight re-gathers per microbatch dominate
+# small-model training collectives otherwise (measured on zamba2/smollm)
+FSDP_BYTES_THRESHOLD = 8e9
+
+
+def _spec_for_param(path: str, shape, mesh: Mesh, stacked: bool,
+                    mode: str = "train", fsdp_on: bool = True):
+    """PartitionSpec for a parameter leaf.
+
+    train/opt: ZeRO-3 — weights stored 2D (FSDP 'data' × TP 'model'); the
+           use-time TP-only constraint (runtime/hints.py) turns the
+           storage→use transfer into a weight all-gather. (A ZeRO-1
+           variant — TP-only bf16 params, FSDP'd optimizer — was measured
+           and is NOT better at these scales; see EXPERIMENTS.md §Perf.)
+    serve: TP-only over 'model' (no optimizer state; gathering weights
+           every decode step would dwarf the sparse-attention win). MoE
+           experts stay 2D (E → 'data' EP, d → 'model' TP) at serve —
+           a 1T-param MoE cannot live TP-16.
+    """
+    nd = len(shape)
+    inner = shape[1:] if stacked else shape
+    fsdp = "data" if (mode in ("train", "opt") and fsdp_on) else None
+
+    def build(*axes):
+        axes = list(axes) + [None] * (len(inner) - len(axes))
+        # drop axes that don't divide (GSPMD tolerates uneven sharding but
+        # aligned shards keep layouts clean; fall back to replication)
+        axes = [a if _div(inner[i], mesh, a) else None
+                for i, a in enumerate(axes)]
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    if "embed" in path:
+        return build("model", None)
+    if "lm_head" in path:
+        return build(fsdp, "model")
+    # MoE experts. train: E -> model (EP) x d/f -> data (FSDP slice;
+    # measured best of three candidates — E->data x d->model and
+    # unsharded-inner both regressed 7-11x, see EXPERIMENTS.md §Perf).
+    # serve: E -> data, d -> model (decode batches are tiny; EP across
+    # data keeps 1T-param experts resident).
+    if "w_gate" in path or "w_up" in path:
+        if len(inner) == 3:
+            return (build("model", "data", None) if mode in ("train", "opt")
+                    else build("data", "model", None))
+        return build(fsdp, "model")
+    if "w_down" in path:
+        if len(inner) == 3:
+            return (build("model", None, "data") if mode in ("train", "opt")
+                    else build("data", None, "model"))
+        return build("model", fsdp)
+    if "router" in path:
+        return build(fsdp, None)
+    if any(k in path for k in ("wq", "wk", "wv", "w_qkv", "w_o", "w_if",
+                               "in_proj", "['w']", "w_z", "w_x", "w_B",
+                               "w_C", "w_dt")):
+        return build(fsdp, "model")
+    if any(k in path for k in ("wo", "out_proj")):
+        return build("model", fsdp)
+    if "conv_w" in path or "['conv_x']" in path or "['conv_B']" in path \
+            or "['conv_C']" in path:
+        return build(None, "model")
+    if "['r']" in path:  # slstm recurrent (h, p, 4p)
+        return build("model", None, None)
+    if any(k in path for k in ("bq", "bk", "bv", "b_if")):
+        return build("model")
+    return build(*([None] * len(inner)))
+
+
+def param_shardings(cfg, mesh: Mesh, params, mode: str = "train"):
+    """Pytree of NamedSharding matching ``params``."""
+    fsdp_on = True
+    if mode in ("train", "opt") and cfg is not None:
+        opt_bytes = cfg.param_count() * 12 / mesh.shape["model"]
+        fsdp_on = opt_bytes > FSDP_BYTES_THRESHOLD
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        pstr = jax.tree_util.keystr(path)
+        stacked = "['blocks']" in pstr
+        spec = _spec_for_param(pstr, leaf.shape, mesh, stacked, mode,
+                               fsdp_on)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), out)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int):
+    """Sharding for (B, ...) input batches: B over (pod, data) if divisible."""
+    ax = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ax]))
+    if batch_size % size == 0:
+        return NamedSharding(mesh, P(ax))
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        return NamedSharding(mesh, P("data"))
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Serve-cache layouts
+# ---------------------------------------------------------------------------
+
+LAYOUT_HEAD = "head"
+LAYOUT_COPLACE = "coplace"
+LAYOUT_INTERLEAVE = "interleave"
+LAYOUT_COPLACE_SHMAP = "coplace_shmap"  # shard_map partial-attention path
+
+
+def _cache_leaf_spec(path: str, shape, mesh: Mesh, layout: str,
+                     batch_ok: bool, stacked: bool):
+    inner = shape[1:] if stacked else shape
+    nd = len(inner)
+    b_ax = batch_axes(mesh) if batch_ok else None
+
+    def build(*axes):
+        axes = (list(axes) + [None] * nd)[:nd]
+        axes = [a if _div(inner[i], mesh, a) else None
+                for i, a in enumerate(axes)]
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    h_ax = "model"
+    if "k_pages" in path or "v_pages" in path:      # (B, Hr, C, P, D)
+        if layout == LAYOUT_HEAD:
+            return build(b_ax, h_ax, None, None, None)
+        if layout in (LAYOUT_COPLACE, LAYOUT_COPLACE_SHMAP) or batch_ok:
+            # batch already consumes 'data'; pages over 'model'
+            return build(b_ax, None, "model", None, None)
+        return build(None, None, "model", "data", None)  # interleave
+    if "tau_min" in path or "tau_max" in path:      # (B, Hr, C, D)
+        if layout == LAYOUT_HEAD:
+            return build(b_ax, h_ax, None, None)
+        return build(b_ax, None, "model", None)
+    if "importance" in path or "page_start" in path:  # (B, Hr, C)
+        if layout == LAYOUT_HEAD:
+            return build(b_ax, h_ax, None)
+        return build(b_ax, None, "model")
+    if "sel_idx" in path:                            # (B, Hr, K)
+        return build(b_ax, None, None)
+    # dataclass attributes render as ".k" in keystr (dicts as "['k']")
+    if path.endswith(".k") or path.endswith(".v"):   # stream/full (B,H,T,D)
+        return build(b_ax, h_ax, None, None)
+    if "['ssm']" in path:                            # (B, H, N, P) state
+        return build(b_ax, "model", None, None)
+    if any(k in path for k in ("['conv']", "['conv_x']", "['conv_B']",
+                               "['conv_C']")):                 # (B, K, C)
+        return build(b_ax, None, "model")
+    if "['C']" in path:                              # mlstm (B,H,P,P)
+        return build(b_ax, "model", None, None)
+    if path.endswith(".pos"):                        # stream ring (B, Hs, W)
+        return build(b_ax, h_ax, None)
+    if any(path.endswith(k) for k in ("['n']", "['m']", "['h']", "['c']")):
+        return build(b_ax, "model")
+    return build(*([None] * nd))
+
+
+def state_shardings(cfg, mesh: Mesh, state, *, layout: str | None = None,
+                    batch_size: int | None = None):
+    """Pytree of NamedSharding for a ServeState.
+
+    layout defaults to: interleave when the batch can't fill (pod x data),
+    head otherwise — i.e. H²EAL co-placement turns on exactly when plain
+    data parallelism starves (the paper's motivation).
+    """
+    ax = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in ax]))
+    if layout is None:
+        layout = (LAYOUT_INTERLEAVE
+                  if (batch_size is not None and batch_size < dp)
+                  else LAYOUT_HEAD)
+    batch_ok = batch_size is None or batch_size % dp == 0
+
+    flat = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat[0]:
+        pstr = jax.tree_util.keystr(path)
+        if "length" in pstr or not hasattr(leaf, "shape") or leaf.ndim == 0:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        stacked = "['blocks']" in pstr
+        spec = _cache_leaf_spec(pstr, leaf.shape, mesh, layout,
+                                batch_ok, stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state), out)

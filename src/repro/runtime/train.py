@@ -1,0 +1,105 @@
+"""Distributed training step builder (pjit).
+
+Features for the 1000+-node posture:
+  * microbatched gradient accumulation (scan) — the per-microbatch psum
+    overlaps the next microbatch's compute under XLA's async collectives;
+  * remat per layer-period (jax.checkpoint inside the model scan);
+  * bf16 gradient reduction option (half the DP all-reduce bytes);
+  * optimizer state sharded like the params (ZeRO via the 'data' dim of
+    the 2D param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime import sharding as shardlib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    grad_dtype: str = "f32"       # "f32" | "bf16"
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    impl: str = "ref"
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics). Pure; jit/pjit-ready."""
+    ocfg = adamw.AdamWConfig(lr=tcfg.lr)
+
+    def loss_fn(params, tokens, labels):
+        loss = M.lm_loss(cfg, params, tokens, labels, impl=tcfg.impl,
+                         remat=tcfg.remat)
+        return loss
+
+    def train_step(params, opt_state, batch, step):
+        tokens, labels = batch["tokens"], batch["labels"]
+        mb = tcfg.microbatches
+        if mb > 1:
+            b = tokens.shape[0]
+            tk = tokens.reshape(mb, b // mb, *tokens.shape[1:])
+            lb = labels.reshape(mb, b // mb, *labels.shape[1:])
+
+            def micro(acc, xs):
+                t, l = xs
+                loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+                if tcfg.grad_dtype == "bf16":
+                    g = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), ()
+
+            zero = (jax.tree.map(
+                lambda p: jnp.zeros(p.shape,
+                                    jnp.bfloat16 if tcfg.grad_dtype == "bf16"
+                                    else jnp.float32), params),
+                jnp.float32(0))
+            (grads, loss_sum), _ = jax.lax.scan(micro, zero, (tk, lb))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / mb, grads)
+            loss = loss_sum / mb
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+            if tcfg.grad_dtype == "bf16":
+                grads = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16).astype(jnp.float32),
+                    grads)
+        lr_scale = adamw.cosine_schedule(
+            step, warmup=tcfg.warmup, total=tcfg.total_steps)
+        params2, opt_state2, gnorm = adamw.apply_updates(
+            params, grads, opt_state, ocfg, lr_scale=lr_scale)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr_scale": lr_scale}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh, params,
+                   opt_state, batch_size: int):
+    """jit with explicit in/out shardings for the dry-run and real runs."""
+    ps = shardlib.param_shardings(cfg, mesh, params, mode="train")
+    pso = shardlib.param_shardings(cfg, mesh, params, mode="opt")
+    os_ = {"mu": pso, "nu": pso,
+           "count": NamedSharding(mesh, P())}
+    bs = shardlib.batch_sharding(mesh, batch_size)
+    batch_sh = {"tokens": bs, "labels": bs}
+    scalar = NamedSharding(mesh, P())
+    step_fn = make_train_step(cfg, tcfg)
+    return jax.jit(
+        step_fn,
+        in_shardings=(ps, os_, batch_sh, scalar),
+        out_shardings=(ps, os_, {"loss": scalar, "grad_norm": scalar,
+                                 "lr_scale": scalar}),
+        donate_argnums=(0, 1),
+    )

@@ -1,0 +1,14 @@
+from repro.sched.mapping import MappingPlan, Stage, map_heads  # noqa: F401
+from repro.sched.tiling import (  # noqa: F401
+    Tile,
+    grid_coords,
+    head_permutation,
+    manhattan,
+    solve_tiling,
+)
+from repro.sched.balance import (  # noqa: F401
+    balanced_loads,
+    head_load,
+    imbalance,
+    unbalanced_loads,
+)

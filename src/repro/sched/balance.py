@@ -1,0 +1,63 @@
+"""Cross-head load balancing with memory-compute co-placement (paper §IV-B).
+
+Workload model (tokens touched per decode step per head):
+  streaming head:  sink + local
+  retrieval head:  sink + local + select_budget (+ page-metadata scan)
+
+Within a tile, retrieval-head KV operations are spread over all member
+banks (co-placement); with interleaved storage each bank receives an equal
+1/|tile| share regardless of which pages were selected. These planners are
+consumed by the hbsim cycle model (Fig 11) and by tests; on the TPU side
+the same decision is realized as the KV-cache sharding layout (see
+runtime/sharding.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+from repro.configs.base import H2ealConfig
+from repro.sched.tiling import Tile
+
+
+def head_load(kind: str, h2: H2ealConfig, metadata_scan_pages: int = 0) -> float:
+    """Tokens of KV touched per decode step for one head."""
+    if kind == "streaming":
+        return h2.sink + h2.local
+    # retrieval: sink+local+selected pages, plus the metadata pass reads
+    # 2 d-vectors per page (≈ 2/page_size of a token's K bytes per page)
+    meta_cost = 2.0 * metadata_scan_pages / h2.page_size
+    return h2.sink + h2.local + h2.select_budget + meta_cost
+
+
+@dataclass(frozen=True)
+class BankLoad:
+    bank: tuple
+    load: float
+
+
+def unbalanced_loads(tiles: Sequence[Tile], kinds: Dict[tuple, str],
+                     h2: H2ealConfig, pages: int = 0) -> List[BankLoad]:
+    """Naive one-head-per-bank placement: each bank carries its own head."""
+    return [BankLoad(bank=b, load=head_load(kinds[b], h2, pages))
+            for t in tiles for b in t.members]
+
+
+def balanced_loads(tiles: Sequence[Tile], kinds: Dict[tuple, str],
+                   h2: H2ealConfig, pages: int = 0) -> List[BankLoad]:
+    """Co-placement: every tile's total load is split evenly across its
+    member banks (interleaved KV storage makes the split exact for any
+    page selection)."""
+    out: List[BankLoad] = []
+    for t in tiles:
+        total = sum(head_load(kinds[b], h2, pages) for b in t.members)
+        share = total / len(t.members)
+        out.extend(BankLoad(bank=b, load=share) for b in t.members)
+    return out
+
+
+def imbalance(loads: Sequence[BankLoad]) -> float:
+    """max/mean load ratio (1.0 = perfectly balanced)."""
+    vals = [x.load for x in loads]
+    mean = sum(vals) / len(vals)
+    return max(vals) / mean if mean > 0 else 1.0

@@ -1,0 +1,161 @@
+"""H²EAL hybrid attention: decode/prefill against brute-force oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import H2ealConfig
+from repro.core.hybrid_attention import (
+    AttnSpec,
+    decode_attention,
+    init_decode_state,
+    prefill_attention,
+)
+from repro.kernels.ref import flash_attention_ref, paged_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+B, HQ, HKV, D = 2, 4, 2, 32
+P, SINK, LOCAL = 8, 2, 16
+
+
+def _spec(select_budget=96, share_window=1, static_sparsity=0.5):
+    h2 = H2ealConfig(sink=SINK, local=LOCAL, page_size=P,
+                     select_budget=select_budget,
+                     share_window=share_window,
+                     static_sparsity=static_sparsity)
+    return AttnSpec(n_q=HQ, n_kv=HKV, head_dim=D, h2=h2)
+
+
+def _oracle(qn, k_all, v_all, ctx, nr):
+    """retrieval heads -> full attention; streaming -> sink+local."""
+    kt = k_all.transpose(0, 2, 1, 3)
+    vt = v_all.transpose(0, 2, 1, 3)
+    pos = jnp.arange(ctx)
+    g = HQ // HKV
+    valid_full = jnp.broadcast_to(pos[None, None] < ctx, (B, HKV, ctx))
+    valid_sl = jnp.broadcast_to(
+        (pos[None, None] < SINK) | (pos[None, None] >= ctx - LOCAL),
+        (B, HKV, ctx))
+    o_full = paged_attention_ref(qn, kt, vt, valid_full)
+    o_sl = paged_attention_ref(qn, kt, vt, valid_sl)
+    return jnp.concatenate(
+        [o_full.reshape(B, HKV, g, D)[:, :nr],
+         o_sl.reshape(B, HKV, g, D)[:, nr:]], axis=1).reshape(B, HQ, D)
+
+
+@pytest.mark.parametrize("s", [96, 97, 104, 20, 33])
+def test_decode_topk_all_equals_full(s):
+    """top-k spanning all pages ⇒ retrieval heads == full attention."""
+    spec = _spec()
+    ks = jax.random.split(jax.random.fold_in(KEY, s), 5)
+    k = jax.random.normal(ks[0], (B, s, HKV, D))
+    v = jax.random.normal(ks[1], (B, s, HKV, D))
+    paged, stream = init_decode_state(spec, k, v, s, capacity=s + 32)
+    qn = jax.random.normal(ks[2], (B, HQ, D))
+    kn = jax.random.normal(ks[3], (B, HKV, D))
+    vn = jax.random.normal(ks[4], (B, HKV, D))
+    out, _, _ = decode_attention(spec, qn, kn, vn, paged, stream,
+                                 jnp.int32(s), do_select=True)
+    k_all = jnp.concatenate([k, kn[:, None]], axis=1)
+    v_all = jnp.concatenate([v, vn[:, None]], axis=1)
+    exp = _oracle(qn, k_all, v_all, s + 1, spec.n_retrieval)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_decode_multistep_matches_oracle():
+    """Multi-step decode with top-k=all stays exact at every step."""
+    spec = _spec()
+    s = 64
+    ks = jax.random.split(KEY, 2)
+    k = jax.random.normal(ks[0], (B, s, HKV, D))
+    v = jax.random.normal(ks[1], (B, s, HKV, D))
+    paged, stream = init_decode_state(spec, k, v, s, capacity=128)
+    k_all, v_all = k, v
+    length = jnp.int32(s)
+    for step in range(6):
+        kk = jax.random.split(jax.random.fold_in(KEY, 100 + step), 3)
+        qn = jax.random.normal(kk[0], (B, HQ, D))
+        kn = jax.random.normal(kk[1], (B, HKV, D))
+        vn = jax.random.normal(kk[2], (B, HKV, D))
+        out, paged, stream = decode_attention(
+            spec, qn, kn, vn, paged, stream, length, do_select=True)
+        k_all = jnp.concatenate([k_all, kn[:, None]], axis=1)
+        v_all = jnp.concatenate([v_all, vn[:, None]], axis=1)
+        exp = _oracle(qn, k_all, v_all, int(length) + 1, spec.n_retrieval)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-4)
+        length = length + 1
+
+
+def test_sparse_decode_share_window_runs_finite():
+    spec = _spec(select_budget=16, share_window=2)
+    ks = jax.random.split(KEY, 2)
+    k = jax.random.normal(ks[0], (B, 64, HKV, D))
+    v = jax.random.normal(ks[1], (B, 64, HKV, D))
+    paged, stream = init_decode_state(spec, k, v, 64, capacity=128)
+    length = jnp.int32(64)
+    for step in range(8):
+        kk = jax.random.split(jax.random.fold_in(KEY, 200 + step), 3)
+        qn = jax.random.normal(kk[0], (B, HQ, D))
+        kn = jax.random.normal(kk[1], (B, HKV, D))
+        vn = jax.random.normal(kk[2], (B, HKV, D))
+        out, paged, stream = decode_attention(
+            spec, qn, kn, vn, paged, stream, length,
+            do_select=(step % 2 == 0))
+        assert np.all(np.isfinite(np.asarray(out)))
+        length = length + 1
+
+
+def test_prefill_split_matches_per_head_reference():
+    spec = _spec()
+    s = 96
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, s, HQ, D))
+    k = jax.random.normal(ks[1], (B, s, HKV, D))
+    v = jax.random.normal(ks[2], (B, s, HKV, D))
+    out = prefill_attention(spec, q, k, v)
+    nr = spec.n_retrieval
+    g = HQ // HKV
+    qg = q.reshape(B, s, HKV, g, D)
+    o_r = flash_attention_ref(qg[:, :, :nr].reshape(B, s, nr * g, D),
+                              k[:, :, :nr], v[:, :, :nr], causal=True)
+    o_s = flash_attention_ref(qg[:, :, nr:].reshape(B, s, (HKV - nr) * g, D),
+                              k[:, :, nr:], v[:, :, nr:], causal=True,
+                              window=LOCAL, sink=SINK)
+    exp = jnp.concatenate([o_r.reshape(B, s, nr, g, D),
+                           o_s.reshape(B, s, HKV - nr, g, D)],
+                          axis=2).reshape(B, s, HQ, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_head_permutation_roundtrip():
+    """A non-identity perm must give the same per-head outputs, re-ordered
+    consistently (outputs return in original head order)."""
+    spec = _spec()
+    s = 96
+    ks = jax.random.split(KEY, 5)
+    k = jax.random.normal(ks[0], (B, s, HKV, D))
+    v = jax.random.normal(ks[1], (B, s, HKV, D))
+    q = jax.random.normal(ks[2], (B, s, HQ, D))
+    perm = jnp.array([1, 0], jnp.int32)
+    out_id = prefill_attention(spec, q, k, v, jnp.array([0, 1], jnp.int32))
+    out_pm = prefill_attention(spec, q, k, v, perm)
+    # with perm [1,0], head 1 becomes retrieval and head 0 streaming — so
+    # outputs differ; but permuting the INPUT heads the same way must agree
+    g = HQ // HKV
+    qp = q.reshape(B, s, HKV, g, D)[:, :, perm].reshape(B, s, HQ, D)
+    out_manual = prefill_attention(spec, qp, k[:, :, perm], v[:, :, perm],
+                                   jnp.array([0, 1], jnp.int32))
+    got = out_pm.reshape(B, s, HKV, g, D)[:, :, perm].reshape(B, s, HQ, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(out_manual),
+                               atol=1e-5)
+    del out_id
+
+
+def test_static_sparsity_zero_means_all_retrieval():
+    spec = _spec(static_sparsity=0.0)
+    assert spec.n_retrieval == HKV and spec.n_streaming == 0
+    spec1 = _spec(static_sparsity=1.0)
+    assert spec1.n_retrieval == 0 and spec1.n_streaming == HKV

@@ -1,0 +1,155 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.page_score import page_score
+from repro.kernels.paged_attention import paged_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+FLASH_CASES = [
+    # b, sq, sk, hq, hkv, d, causal, window, sink
+    (2, 256, 256, 4, 2, 64, True, 0, 0),
+    (1, 128, 128, 4, 4, 64, True, 64, 4),
+    (2, 200, 200, 6, 2, 32, True, 0, 0),       # non-block-multiple
+    (1, 256, 256, 2, 1, 128, False, 0, 0),     # non-causal, MQA
+    (1, 96, 96, 3, 1, 80, True, 32, 2),        # odd head_dim
+    (1, 384, 384, 8, 8, 256, True, 0, 0),      # MHA, big head_dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, sq, sk, hq, hkv, d, causal, window, sink = case
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, sq, hq, d), dtype)
+    k = _rand(ks[1], (b, sk, hkv, d), dtype)
+    v = _rand(ks[2], (b, sk, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, sink=sink,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                  sink=sink)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+PAGED_CASES = [
+    (2, 8, 2, 640, 64),
+    (1, 4, 4, 500, 128),   # non-block-multiple T
+    (2, 2, 1, 100, 32),
+    (1, 16, 2, 1024, 64),  # large GQA group
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(case, dtype):
+    b, hq, hkv, t, d = case
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (b, hq, d), dtype)
+    k = _rand(ks[1], (b, hkv, t, d), dtype)
+    v = _rand(ks[2], (b, hkv, t, d), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.7, (b, hkv, t))
+    out = paged_attention(q, k, v, valid, interpret=True)
+    exp = ref.paged_attention_ref(q, k, v, valid)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_paged_attention_all_invalid_is_zero():
+    b, hq, hkv, t, d = 1, 4, 2, 64, 32
+    q = _rand(KEY, (b, hq, d), jnp.float32)
+    k = jnp.ones((b, hkv, t, d))
+    v = jnp.ones((b, hkv, t, d))
+    valid = jnp.zeros((b, hkv, t), bool)
+    out = paged_attention(q, k, v, valid, interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+SCORE_CASES = [
+    (2, 8, 2, 300, 64),
+    (1, 4, 1, 1000, 128),
+    (2, 6, 3, 64, 32),
+    (1, 4, 4, 37, 16),     # tiny, non-aligned
+]
+
+
+@pytest.mark.parametrize("case", SCORE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_page_score_matches_ref(case, dtype):
+    b, hq, hkv, c, d = case
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, hq, d), dtype)
+    tn = _rand(ks[1], (b, hkv, c, d), jnp.float32) - 1.0
+    tx = tn + jnp.abs(_rand(ks[2], (b, hkv, c, d), jnp.float32))
+    out = page_score(q, tn, tx, interpret=True)
+    exp = ref.page_score_ref(q, tn, tx)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=tol, rtol=tol)
+
+
+def test_page_score_is_upper_bound():
+    """max(q·τmin, q·τmax) ≥ q·k for every key in the page (the Quest
+    guarantee that makes top-k selection sound)."""
+    ks = jax.random.split(KEY, 2)
+    keys = jax.random.normal(ks[0], (1, 2, 16, 8, 32))  # (B,H,pages,P,D)
+    q = jax.random.normal(ks[1], (1, 4, 32))
+    tn = keys.min(axis=3)
+    tx = keys.max(axis=3)
+    scores = ref.page_score_ref(q, tn, tx)  # (1, 2, 16)
+    group = 2
+    qg = np.asarray(q).reshape(1, 2, group, 32)
+    per_key = np.einsum("bhgd,bhpkd->bhgpk", qg, np.asarray(keys))
+    per_key_groupsum = per_key.sum(axis=2)  # (b, h, p, k)
+    assert np.all(np.asarray(scores)[..., None] >= per_key_groupsum - 1e-4)
+
+
+def test_combine_partials_exact():
+    """Cross-bank flash combine == softmax over the union (co-placement)."""
+    ks = jax.random.split(KEY, 3)
+    n, t, d = 4, 32, 16
+    logits = jax.random.normal(ks[0], (n, t)) * 3
+    v = jax.random.normal(ks[1], (n, t, d))
+    m = logits.max(axis=1)
+    p = jnp.exp(logits - m[:, None])
+    l = p.sum(axis=1)
+    o = jnp.einsum("nt,ntd->nd", p, v)
+    got = ref.combine_partials_ref(m, l, o, axis=0)
+    full = jax.nn.softmax(logits.reshape(-1))
+    exp = jnp.einsum("t,td->d", full, v.reshape(-1, d))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
+
+
+def test_chunked_ref_matches_dense():
+    import repro.kernels.ref as R
+    old_t, old_q = R.CHUNK_THRESHOLD, R.Q_CHUNK
+    R.CHUNK_THRESHOLD, R.Q_CHUNK = 64, 64
+    try:
+        for win, sink in [(0, 0), (64, 4), (32, 0)]:
+            ks = jax.random.split(jax.random.fold_in(KEY, win), 3)
+            q = _rand(ks[0], (2, 256, 4, 32), jnp.float32)
+            k = _rand(ks[1], (2, 256, 2, 32), jnp.float32)
+            v = _rand(ks[2], (2, 256, 2, 32), jnp.float32)
+            a = R._flash_attention_ref_chunked(
+                q, k, v, causal=True, window=win, sink=sink, q_offset=0)
+            b = R._flash_attention_ref_dense(
+                q, k, v, causal=True, window=win, sink=sink, q_offset=0)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5)
+    finally:
+        R.CHUNK_THRESHOLD, R.Q_CHUNK = old_t, old_q

@@ -1,0 +1,200 @@
+"""Per-architecture smoke tests (reduced configs) + mixer exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_arch, reduced
+from repro.configs.base import H2ealConfig, SSMConfig, ArchConfig
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_arch_smoke(name):
+    """One forward + prefill + decode step on CPU: shapes + no NaNs."""
+    cfg = reduced(get_arch(name))
+    p = M.init_params(cfg, KEY)
+    b, s = 2, 48
+    if cfg.embed_frontend_stub:
+        batch = jax.random.normal(KEY, (b, s, cfg.d_model))
+        tok = jax.random.normal(KEY, (b, cfg.d_model))
+    else:
+        batch = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        tok = jax.random.randint(KEY, (b,), 0, cfg.vocab_size)
+    logits = M.forward(cfg, p, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    lg, st = M.prefill(cfg, p, batch, capacity=s + 16)
+    assert lg.shape == (b, cfg.vocab_size)
+    lg2, st = M.decode_step(cfg, p, st, tok)
+    assert lg2.shape == (b, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(lg2, np.float32)))
+
+
+@pytest.mark.parametrize("name", ["smollm-360m", "gemma3-1b", "zamba2-2.7b",
+                                  "xlstm-125m", "qwen3-moe-235b-a22b"])
+def test_decode_matches_forward_full_attention(name):
+    """Teacher-forced: prefill+decode logits == forward logits (baseline
+    full-attention path; exactness of the whole serving stack)."""
+    cfg = reduced(get_arch(name))
+    cfg = dataclasses.replace(cfg, h2eal=H2ealConfig(enabled=False))
+    p = M.init_params(cfg, KEY)
+    b, s, extra = 1, 40, 4
+    if cfg.embed_frontend_stub:
+        toks = jax.random.normal(KEY, (b, s + extra, cfg.d_model))
+    else:
+        toks = jax.random.randint(KEY, (b, s + extra), 0, cfg.vocab_size)
+    full = M.forward(cfg, p, toks)
+    lg, st = M.prefill(cfg, p, toks[:, :s], capacity=s + extra + 8)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, s - 1]),
+                               atol=2e-3)
+    for t in range(extra):
+        lg, st = M.decode_step(cfg, p, st, toks[:, s + t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, s + t]), atol=2e-3)
+
+
+def test_hybrid_decode_matches_forward_when_topk_covers_all():
+    """H²EAL with top-k spanning all pages ≡ full attention end-to-end."""
+    cfg = reduced(get_arch("smollm-360m"))
+    big = H2ealConfig(sink=2, local=16, page_size=8, select_budget=4096,
+                      share_window=1)
+    cfg = dataclasses.replace(cfg, h2eal=big)
+    p = M.init_params(cfg, KEY)
+    b, s, extra = 1, 40, 3
+    toks = jax.random.randint(KEY, (b, s + extra), 0, cfg.vocab_size)
+    # oracle: mixed attention — retrieval heads full, streaming sink+local.
+    # For exactness vs M.forward we need ALL heads retrieval:
+    cfg0 = dataclasses.replace(cfg, h2eal=dataclasses.replace(
+        big, static_sparsity=0.0))
+    full = M.forward(cfg0, p, toks)
+    lg, st = M.prefill(cfg0, p, toks[:, :s], capacity=s + extra + 8)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, s - 1]),
+                               atol=2e-3)
+    for t in range(extra):
+        lg, st = M.decode_step(cfg0, p, st, toks[:, s + t])
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, s + t]), atol=2e-3)
+
+
+def _tiny_ssm_cfg():
+    return ArchConfig(
+        name="t", family="hybrid", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=4, d_ff=64, vocab_size=128,
+        ssm=SSMConfig(state_dim=8, conv_dim=4, expand=2, head_dim=16,
+                      chunk=8))
+
+
+def test_mamba2_chunked_equals_recurrent():
+    from repro.models.ssm import (init_mamba2, init_mamba2_state,
+                                  mamba2_forward, mamba2_step)
+    cfg = _tiny_ssm_cfg()
+    p = init_mamba2(KEY, cfg)
+    b, L = 2, 37
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, L, 32))
+    y_par = mamba2_forward(cfg, p, x)
+    st = init_mamba2_state(cfg, b)
+    ys = []
+    for t in range(L):
+        yt, st = mamba2_step(cfg, p, st, x[:, t])
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-3)
+
+
+def test_mamba2_prefill_state_matches_step_state():
+    from repro.models.ssm import (init_mamba2, init_mamba2_state,
+                                  mamba2_final_state, mamba2_step)
+    cfg = _tiny_ssm_cfg()
+    p = init_mamba2(KEY, cfg)
+    b, L = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, L, 32))
+    st = init_mamba2_state(cfg, b)
+    for t in range(L):
+        _, st = mamba2_step(cfg, p, st, x[:, t])
+    st2 = mamba2_final_state(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(st["ssm"]), np.asarray(st2["ssm"]),
+                               atol=1e-3)
+    for k in ("conv_x", "conv_B", "conv_C"):
+        np.testing.assert_allclose(np.asarray(st[k]), np.asarray(st2[k]),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["mlstm", "slstm"])
+def test_xlstm_forward_equals_stepwise(kind):
+    from repro.models import xlstm as X
+    cfg = ArchConfig(name="t", family="ssm", num_layers=1, d_model=32,
+                     num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128)
+    b, L = 2, 19
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, L, 32))
+    if kind == "mlstm":
+        p = X.init_mlstm(KEY, cfg)
+        y_par = X.mlstm_forward(cfg, p, x)
+        st = X.init_mlstm_state(cfg, b)
+        step = X.mlstm_step
+    else:
+        p = X.init_slstm(KEY, cfg)
+        y_par = X.slstm_forward(cfg, p, x)
+        st = X.init_slstm_state(cfg, b)
+        step = X.slstm_step
+    ys = []
+    for t in range(L):
+        yt, st = step(cfg, p, st, x[:, t])
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4)
+
+
+def test_moe_routing_mass_conservation():
+    """Router weights are renormalized over top-k: with capacity ample, the
+    MoE output is a convex combination of expert outputs (finite, bounded,
+    and zero tokens routed nowhere)."""
+    from repro.models.moe import init_moe, moe_ffn
+    cfg = reduced(get_arch("qwen3-moe-235b-a22b"))
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y = moe_ffn(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    # permutation invariance over batch: tokens are routed independently
+    y2 = moe_ffn(cfg, p, x[::-1])
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y[::-1]),
+                               atol=2e-5)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_arch("gemma3-1b")
+    globals_ = [i for i in range(cfg.num_layers)
+                if cfg.layer_is_global_attn(i)]
+    assert globals_ == [5, 11, 17, 23]  # 5:1 ratio, 26 layers
+    cfgr = reduced(cfg)
+    assert cfgr.local_window > 0
+
+
+def test_gating_identifies_streaming_heads():
+    """α-gated attention: heads whose α→0 behave as streaming heads."""
+    from repro.core.gating import classify_heads, gated_attention
+    b, s, hq, hkv, d = 1, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    from repro.kernels.ref import flash_attention_ref
+    full = flash_attention_ref(q, k, v, causal=True)
+    stream = flash_attention_ref(q, k, v, causal=True, window=8, sink=2)
+    alpha = jnp.array([1.0, 0.0])
+    out = gated_attention(q, k, v, alpha, sink=2, local=8)
+    g = hq // hkv
+    np.testing.assert_allclose(np.asarray(out[:, :, :g]),
+                               np.asarray(full[:, :, :g]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[:, :, g:]),
+                               np.asarray(stream[:, :, g:]), atol=1e-5)
+    perm = classify_heads(jnp.array([[0.1, 0.9], [0.8, 0.2]]), 0.5)
+    assert perm.shape == (2, 2)
+    assert int(perm[0, 0]) == 1 and int(perm[1, 0]) == 0
