@@ -1,0 +1,14 @@
+# Reproduce the tier-1 green state with one command.
+.PHONY: test test-fast bench-serve
+
+# full suite (the roadmap's tier-1 command)
+test:
+	./scripts/ci.sh
+
+# fast path: skip the slow multi-device subprocess tests
+test-fast:
+	FAST=1 ./scripts/ci.sh
+
+# continuous-batching throughput benchmark (CPU reduced config)
+bench-serve:
+	PYTHONPATH=src python benchmarks/serve_throughput.py

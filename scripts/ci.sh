@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the exact command the roadmap pins. Run from the
+# repo root. FAST=1 skips the slow (multi-device subprocess) tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARGS=(-x -q)
+if [[ "${FAST:-0}" == "1" ]]; then
+  ARGS+=(-m "not slow")
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"

@@ -82,66 +82,147 @@ def make_stream_cache(b, h_s, sink, local_cap, d, dtype=jnp.bfloat16):
 
 # ---------------------------------------------------------------------------
 # Append ops (decode: one token for all heads of one layer)
+#
+# ``length`` is a scalar on the uniform (lockstep) path and a (B,) vector
+# on the continuous-batching ragged path, where each slot writes at its own
+# position. ``active`` ((B,) bool, ragged path only) masks retired / empty
+# slots: their rows are written back unchanged, so a slot's cache is
+# bit-stable while it waits for the next admission.
 # ---------------------------------------------------------------------------
 
 
-def full_cache_append(cache: FullCache, k_new: Array, v_new: Array, length: Array):
-    """k_new/v_new: (B, Hkv, D); length: scalar int32 current context len."""
-    k = jax.lax.dynamic_update_slice(
-        cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, length, 0))
-    v = jax.lax.dynamic_update_slice(
-        cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, length, 0))
-    return FullCache(k=k, v=v)
+def _is_ragged(length, active) -> bool:
+    return active is not None or jnp.asarray(length).ndim == 1
 
 
-def stream_cache_append(cache: StreamCache, k_new, v_new, length, *, sink: int):
+def _row_mask(active, b: int) -> Array:
+    if active is None:
+        return jnp.ones((b,), bool)
+    return jnp.asarray(active).reshape(b)
+
+
+def full_cache_append(cache: FullCache, k_new: Array, v_new: Array, length,
+                      active=None):
+    """k_new/v_new: (B, Hkv, D); length: scalar or (B,) context len."""
+    if not _is_ragged(length, active):
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new[:, :, None, :].astype(cache.k.dtype),
+            (0, 0, length, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new[:, :, None, :].astype(cache.v.dtype),
+            (0, 0, length, 0))
+        return FullCache(k=k, v=v)
+    b, h, s, _ = cache.k.shape
+    lb = jnp.clip(jnp.broadcast_to(length, (b,)), 0, s - 1)
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(h)[None, :]
+    sl = jnp.broadcast_to(lb[:, None], (b, h))
+    act = _row_mask(active, b)[:, None, None]
+    k_wr = jnp.where(act, k_new.astype(cache.k.dtype), cache.k[bi, hi, sl])
+    v_wr = jnp.where(act, v_new.astype(cache.v.dtype), cache.v[bi, hi, sl])
+    return FullCache(k=cache.k.at[bi, hi, sl].set(k_wr),
+                     v=cache.v.at[bi, hi, sl].set(v_wr))
+
+
+def stream_cache_append(cache: StreamCache, k_new, v_new, length, *,
+                        sink: int, active=None):
     """Ring-buffer append: pos<sink go to slot=pos, else ring over local part."""
     w = cache.k.shape[2]
     local_cap = w - sink
-    slot = jnp.where(length < sink, length, sink + (length - sink) % local_cap)
-    k = jax.lax.dynamic_update_slice(
-        cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, slot, 0))
-    v = jax.lax.dynamic_update_slice(
-        cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, slot, 0))
-    pos = jax.lax.dynamic_update_slice(
-        cache.pos, jnp.broadcast_to(length, cache.pos.shape[:2])[:, :, None].astype(jnp.int32),
-        (0, 0, slot))
-    return StreamCache(k=k, v=v, pos=pos)
+    if not _is_ragged(length, active):
+        slot = jnp.where(length < sink, length,
+                         sink + (length - sink) % local_cap)
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, slot, 0))
+        pos = jax.lax.dynamic_update_slice(
+            cache.pos, jnp.broadcast_to(length, cache.pos.shape[:2])[:, :, None].astype(jnp.int32),
+            (0, 0, slot))
+        return StreamCache(k=k, v=v, pos=pos)
+    b, h, _, _ = cache.k.shape
+    lb = jnp.broadcast_to(length, (b,)).astype(jnp.int32)
+    slot = jnp.where(lb < sink, lb, sink + (lb - sink) % local_cap)
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(h)[None, :]
+    sl = jnp.broadcast_to(slot[:, None], (b, h))
+    act = _row_mask(active, b)
+    k_wr = jnp.where(act[:, None, None], k_new.astype(cache.k.dtype),
+                     cache.k[bi, hi, sl])
+    v_wr = jnp.where(act[:, None, None], v_new.astype(cache.v.dtype),
+                     cache.v[bi, hi, sl])
+    pos_wr = jnp.where(act[:, None], lb[:, None], cache.pos[bi, hi, sl])
+    return StreamCache(k=cache.k.at[bi, hi, sl].set(k_wr),
+                       v=cache.v.at[bi, hi, sl].set(v_wr),
+                       pos=cache.pos.at[bi, hi, sl].set(
+                           pos_wr.astype(jnp.int32)))
 
 
-def paged_cache_append(cache: PagedCache, k_new, v_new, length):
+def paged_cache_append(cache: PagedCache, k_new, v_new, length, active=None):
     """Append one token at absolute position ``length`` (page = length//P).
 
     Metadata for the page is updated incrementally (running min/max).
     No-eviction layout: page index is position//P (capacity covers max ctx).
     """
     p = cache.k_pages.shape[3]
-    page = length // p
-    off = length % p
-    k_pages = jax.lax.dynamic_update_slice(
-        cache.k_pages, k_new[:, :, None, None, :].astype(cache.k_pages.dtype),
-        (0, 0, page, off, 0))
-    v_pages = jax.lax.dynamic_update_slice(
-        cache.v_pages, v_new[:, :, None, None, :].astype(cache.v_pages.dtype),
-        (0, 0, page, off, 0))
-    kf = k_new.astype(jnp.float32)[:, :, None, :]
-    old_min = jax.lax.dynamic_slice(
-        cache.tau_min, (0, 0, page, 0),
-        (cache.tau_min.shape[0], cache.tau_min.shape[1], 1, cache.tau_min.shape[3]))
-    old_max = jax.lax.dynamic_slice(
-        cache.tau_max, (0, 0, page, 0),
-        (cache.tau_max.shape[0], cache.tau_max.shape[1], 1, cache.tau_max.shape[3]))
-    tau_min = jax.lax.dynamic_update_slice(
-        cache.tau_min, jnp.minimum(old_min, kf), (0, 0, page, 0))
-    tau_max = jax.lax.dynamic_update_slice(
-        cache.tau_max, jnp.maximum(old_max, kf), (0, 0, page, 0))
-    start = jax.lax.dynamic_update_slice(
-        cache.page_start,
-        jnp.broadcast_to(page * p, cache.page_start.shape[:2])[:, :, None].astype(jnp.int32),
-        (0, 0, page))
+    if not _is_ragged(length, active):
+        page = length // p
+        off = length % p
+        k_pages = jax.lax.dynamic_update_slice(
+            cache.k_pages, k_new[:, :, None, None, :].astype(cache.k_pages.dtype),
+            (0, 0, page, off, 0))
+        v_pages = jax.lax.dynamic_update_slice(
+            cache.v_pages, v_new[:, :, None, None, :].astype(cache.v_pages.dtype),
+            (0, 0, page, off, 0))
+        kf = k_new.astype(jnp.float32)[:, :, None, :]
+        old_min = jax.lax.dynamic_slice(
+            cache.tau_min, (0, 0, page, 0),
+            (cache.tau_min.shape[0], cache.tau_min.shape[1], 1, cache.tau_min.shape[3]))
+        old_max = jax.lax.dynamic_slice(
+            cache.tau_max, (0, 0, page, 0),
+            (cache.tau_max.shape[0], cache.tau_max.shape[1], 1, cache.tau_max.shape[3]))
+        tau_min = jax.lax.dynamic_update_slice(
+            cache.tau_min, jnp.minimum(old_min, kf), (0, 0, page, 0))
+        tau_max = jax.lax.dynamic_update_slice(
+            cache.tau_max, jnp.maximum(old_max, kf), (0, 0, page, 0))
+        start = jax.lax.dynamic_update_slice(
+            cache.page_start,
+            jnp.broadcast_to(page * p, cache.page_start.shape[:2])[:, :, None].astype(jnp.int32),
+            (0, 0, page))
+        return dataclasses.replace(
+            cache, k_pages=k_pages, v_pages=v_pages,
+            tau_min=tau_min, tau_max=tau_max, page_start=start)
+
+    b, h, c, _, _ = cache.k_pages.shape
+    lb = jnp.broadcast_to(length, (b,)).astype(jnp.int32)
+    page = jnp.clip(lb // p, 0, c - 1)
+    off = lb % p
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(h)[None, :]
+    pg = jnp.broadcast_to(page[:, None], (b, h))
+    of = jnp.broadcast_to(off[:, None], (b, h))
+    act = _row_mask(active, b)
+    a3 = act[:, None, None]
+    k_wr = jnp.where(a3, k_new.astype(cache.k_pages.dtype),
+                     cache.k_pages[bi, hi, pg, of])
+    v_wr = jnp.where(a3, v_new.astype(cache.v_pages.dtype),
+                     cache.v_pages[bi, hi, pg, of])
+    kf = k_new.astype(jnp.float32)
+    old_min = cache.tau_min[bi, hi, pg]
+    old_max = cache.tau_max[bi, hi, pg]
+    min_wr = jnp.where(a3, jnp.minimum(old_min, kf), old_min)
+    max_wr = jnp.where(a3, jnp.maximum(old_max, kf), old_max)
+    start_wr = jnp.where(act[:, None], jnp.broadcast_to((page * p)[:, None],
+                                                        (b, h)),
+                         cache.page_start[bi, hi, pg])
     return dataclasses.replace(
-        cache, k_pages=k_pages, v_pages=v_pages,
-        tau_min=tau_min, tau_max=tau_max, page_start=start)
+        cache,
+        k_pages=cache.k_pages.at[bi, hi, pg, of].set(k_wr),
+        v_pages=cache.v_pages.at[bi, hi, pg, of].set(v_wr),
+        tau_min=cache.tau_min.at[bi, hi, pg].set(min_wr),
+        tau_max=cache.tau_max.at[bi, hi, pg].set(max_wr),
+        page_start=cache.page_start.at[bi, hi, pg].set(
+            start_wr.astype(jnp.int32)))
 
 
 def pool_append(cache: PagedCache, k_new: Array, v_new: Array, length: Array,

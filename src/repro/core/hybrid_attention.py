@@ -194,12 +194,23 @@ def decode_attention(
     v_new: Array,             # (B, Hkv, D)
     paged: cachelib.PagedCache,
     stream: cachelib.StreamCache,
-    length: Array,            # scalar int32: context BEFORE this token
+    length: Array,            # context BEFORE this token: scalar or (B,)
     *,
     do_select: bool,
     perm: Array | None = None,
+    active: Array | None = None,       # (B,) bool — ragged batch only
+    need_select: Array | None = None,  # (B,) bool — per-slot share window
 ):
-    """One decode step. Returns (out (B,Hq,D), paged', stream')."""
+    """One decode step. Returns (out (B,Hq,D), paged', stream').
+
+    Uniform (lockstep) batches pass a scalar ``length``; the
+    continuous-batching engine passes per-slot (B,) lengths plus ``active``
+    (inactive slots neither append nor advance — their caches are
+    bit-stable) and ``need_select`` (per-slot share-window phase: under the
+    ``do_select`` variant only slots whose window expired take the fresh
+    page selection / importance update; the rest keep their cached
+    selection, exactly as if the select step had not run for them).
+    """
     h2 = spec.h2
     g = spec.group
     nr = spec.n_retrieval
@@ -215,19 +226,20 @@ def decode_attention(
 
     outs = []
     if nr > 0:
-        paged = cachelib.paged_cache_append(paged, k_r, v_r, length)
+        paged = cachelib.paged_cache_append(paged, k_r, v_r, length,
+                                            active=active)
         if do_select:
             scores = paging.score_pages(
                 q_r, paged.tau_min, paged.tau_max, paged.page_start, ctx,
                 sink=h2.sink, local=h2.local, page=h2.page_size,
                 impl=spec.impl)
             sel = paging.select_pages(scores, h2.top_k_pages)
-            paged = dataclasses.replace(
-                paged,
-                sel_idx=sel,
-                importance=paging.accumulate_importance(
-                    paged.importance, scores),
-            )
+            imp = paging.accumulate_importance(paged.importance, scores)
+            if need_select is not None:
+                ns = need_select[:, None, None]
+                sel = jnp.where(ns, sel, paged.sel_idx)
+                imp = jnp.where(ns, imp, paged.importance)
+            paged = dataclasses.replace(paged, sel_idx=sel, importance=imp)
         slots = paging.attended_page_slots(
             paged.sel_idx, ctx, sink=h2.sink, local=h2.local,
             page=h2.page_size)
@@ -238,10 +250,12 @@ def decode_attention(
         outs.append(kops.paged_attention(q_r, gk, gv, valid, impl=spec.impl))
     if spec.n_streaming > 0:
         stream = cachelib.stream_cache_append(
-            stream, k_s, v_s, length, sink=h2.sink)
+            stream, k_s, v_s, length, sink=h2.sink, active=active)
         # exact sink+local mask (ring carries one page of slack)
+        ctx_b = jnp.broadcast_to(jnp.asarray(ctx, jnp.int32),
+                                 (q.shape[0],))[:, None, None]
         valid_s = (stream.pos >= 0) & (
-            (stream.pos < h2.sink) | (stream.pos >= ctx - h2.local))
+            (stream.pos < h2.sink) | (stream.pos >= ctx_b - h2.local))
         outs.append(kops.paged_attention(
             q_s, stream.k, stream.v, valid_s, impl=spec.impl))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
@@ -460,13 +474,15 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
         out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
         return out, kp, vp, tmin, tmax, imp, pstart, sel
 
-    shard = jax.shard_map(
+    from repro.runtime.compat import shard_map as _shard_map
+
+    shard = _shard_map(
         body, mesh=mesh,
         in_specs=(rep, rep, rep, cache5, cache5, cache4, cache4, cache3,
                   cache3, P(bspec, None, None), P()),
         out_specs=(rep, cache5, cache5, cache4, cache4, cache3, cache3,
                    P(bspec, None, None)),
-        check_vma=False,
+        check=False,
     )
     out, kpn, vpn, tminn, tmaxn, impn, pstartn, seln = shard(
         q_r, k_r, v_r, paged.k_pages, paged.v_pages, paged.tau_min,
@@ -483,7 +499,8 @@ NEG_INF_HALF = -5e29
 
 def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
                              length, *, do_select: bool, perm=None,
-                             axis: str = "model"):
+                             axis: str = "model", active=None,
+                             need_select=None):
     """decode_attention with the retrieval heads under shard_map
     co-placement. Streaming heads use the normal (tiny) path."""
     from repro.runtime import hints
@@ -491,7 +508,13 @@ def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
     mesh = hints.current_mesh()
     if mesh is None:
         return decode_attention(spec, q, k_new, v_new, paged, stream,
-                                length, do_select=do_select, perm=perm)
+                                length, do_select=do_select, perm=perm,
+                                active=active, need_select=need_select)
+    if active is not None or jnp.asarray(length).ndim == 1:
+        raise NotImplementedError(
+            "ragged (per-slot) decode is not supported under the "
+            "coplace_shmap layout yet — use the default layout for the "
+            "continuous-batching engine")
     h2 = spec.h2
     g = spec.group
     nr = spec.n_retrieval
@@ -525,12 +548,16 @@ def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
 
 
 def full_decode_attention(spec: AttnSpec, q, k_new, v_new,
-                          cache: cachelib.FullCache, length):
-    cache = cachelib.full_cache_append(cache, k_new, v_new, length)
-    pos = jnp.arange(cache.k.shape[2])
-    valid = pos[None, None, :] < (length + 1)
+                          cache: cachelib.FullCache, length,
+                          active: Array | None = None):
+    cache = cachelib.full_cache_append(cache, k_new, v_new, length,
+                                       active=active)
+    b = q.shape[0]
+    lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))[:, None, None]
+    pos = jnp.arange(cache.k.shape[2])[None, None, :]
+    valid = pos < (lb + 1)
     if spec.window > 0:
-        valid &= pos[None, None, :] > (length - spec.window)
+        valid &= pos > (lb - spec.window)
     valid = jnp.broadcast_to(valid, cache.k.shape[:3])
     out = kops.paged_attention(q, cache.k, cache.v, valid, impl=spec.impl)
     return out, cache

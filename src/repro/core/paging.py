@@ -43,6 +43,16 @@ def page_counts(*, sink: int, local: int, page: int) -> tuple[int, int]:
     return n_sink, n_local
 
 
+def _ctx_batched(ctx: Array, b: int) -> Array:
+    """Normalize ctx to per-batch-row shape (B,).
+
+    ``ctx`` is a scalar for the uniform (lockstep) decode path and a (B,)
+    vector for the continuous-batching engine's ragged path; downstream
+    math broadcasts over (B, H, ...) identically for both.
+    """
+    return jnp.broadcast_to(jnp.asarray(ctx, jnp.int32), (b,))
+
+
 def _first_local_page(ctx: Array, *, local: int, page: int) -> Array:
     return jnp.maximum(ctx - local, 0) // page
 
@@ -59,10 +69,14 @@ def score_pages(
     page: int,
     impl: str = "ref",
 ) -> Array:
-    """Relevance scores (B, Hkv, C); sink/local/empty pages forced to -inf."""
+    """Relevance scores (B, Hkv, C); sink/local/empty pages forced to -inf.
+
+    ``ctx`` may be a scalar (uniform batch) or (B,) (ragged batch).
+    """
     scores = kops.page_score(q, tau_min, tau_max, impl=impl)
     n_sink, _ = page_counts(sink=sink, local=local, page=page)
-    first_local = _first_local_page(ctx, local=local, page=page)
+    ctx = _ctx_batched(ctx, page_start.shape[0])
+    first_local = _first_local_page(ctx, local=local, page=page)[:, None, None]
     pidx = jnp.where(page_start >= 0, page_start // page, -1)
     selectable = (page_start >= 0) & (pidx >= n_sink) & (pidx < first_local)
     return jnp.where(selectable, scores, NEG_INF)
@@ -96,12 +110,14 @@ def attended_page_slots(
     Returns (B, Hkv, n_sink + K + n_local) int32. Assumes the no-eviction
     layout where slot == page index == position // page. Out-of-range local
     slots are clamped for gather safety; token_validity() masks them.
+    ``ctx`` may be a scalar (uniform batch) or (B,) (ragged batch).
     """
     b, h, _ = sel_idx.shape
     n_sink, n_local = page_counts(sink=sink, local=local, page=page)
     sink_pages = jnp.broadcast_to(
         jnp.arange(n_sink, dtype=jnp.int32), (b, h, n_sink))
-    first_local = _first_local_page(ctx, local=local, page=page)
+    ctx = _ctx_batched(ctx, b)
+    first_local = _first_local_page(ctx, local=local, page=page)[:, None, None]
     local_pages = first_local + jnp.arange(n_local, dtype=jnp.int32)
     local_pages = jnp.maximum(local_pages, 0)
     local_pages = jnp.broadcast_to(local_pages, (b, h, n_local)).astype(jnp.int32)
@@ -133,6 +149,7 @@ def token_validity(
     Enforces the section partition documented in the module docstring, so
     the three sections never overlap even for degenerate selections (short
     contexts where nothing is selectable yet).
+    ``ctx`` may be a scalar (uniform batch) or (B,) (ragged batch).
     """
     b, h, n = slots.shape
     n_sink, n_local = page_counts(sink=sink, local=local, page=page)
@@ -141,18 +158,19 @@ def token_validity(
     offs = jnp.arange(page, dtype=jnp.int32)
     pos = start[:, :, :, None] + offs[None, None, None, :]  # (B,H,N,P)
     nonempty = (start >= 0)[:, :, :, None]
-    in_ctx = pos < ctx
+    ctx = _ctx_batched(ctx, b)
+    in_ctx = pos < ctx[:, None, None, None]
     section = jnp.concatenate([
         jnp.zeros((n_sink,), jnp.int32),
         jnp.ones((top_k,), jnp.int32),
         jnp.full((n_local,), 2, jnp.int32),
     ])
     sec = section[None, None, :, None]
-    first_local = _first_local_page(ctx, local=local, page=page)
+    first_local = _first_local_page(ctx, local=local, page=page)[:, None, None]
     pidx = start // page
     ok_sink = jnp.broadcast_to(True, pos.shape)  # whole sink page(s)
     ok_local = (
-        (pos >= jnp.maximum(first_local, n_sink) * page)
+        (pos >= (jnp.maximum(first_local, n_sink) * page)[:, :, :, None])
         & (pidx >= first_local)[:, :, :, None]
     )
     ok_sel = ((pidx >= n_sink) & (pidx < first_local))[:, :, :, None]

@@ -1,12 +1,28 @@
-"""Serving driver: batched prefill + decode with H²EAL sparse attention.
+"""Serving driver: lockstep batches or continuous batching.
 
-Realizes the paper's serving loop: page selection runs every
-``share_window`` steps (the `select` compiled variant), cheaper `reuse`
-steps in between. Greedy sampling.
+Two workload modes:
+
+``--workload uniform`` (the original driver): one fixed batch, every
+request shares one prompt length and one generation length. Page
+selection runs every ``share_window`` steps (the `select` compiled
+variant), cheaper `reuse` steps in between. Greedy sampling.
+
+``--workload ragged``: slot-based continuous batching via
+``repro.serving.Engine``. Requests draw prompt lengths from a small set
+of buckets and generation lengths from [gen-min, gen-max]; the engine
+admits them into free slots of a fixed max-batch compiled shape
+(prefill-then-pack), retires finished slots without recompiling, and
+keeps per-slot share-window selection cadence. Reports throughput, batch
+occupancy, per-function jit compile counts, and (with
+``--report-balance``) the sched/balance imbalance score of the final
+ragged batch on a 4x4 bank grid.
 
 CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --reduced --prompt-len 96 --gen 32 --batch 2
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --reduced --workload ragged --requests 8 --max-batch 4 \
+      --prompt-buckets 32,64 --gen-min 4 --gen-max 24
 """
 from __future__ import annotations
 
@@ -15,6 +31,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.launch.mesh import make_local_mesh
@@ -24,7 +41,8 @@ from repro.runtime import serve as serve_rt
 
 def generate(cfg, params, prompts, *, gen: int, capacity: int,
              mesh=None, layout=None, h2eal=True, greedy=True):
-    """prompts: (B, S) int32. Returns (tokens (B, gen), stats dict)."""
+    """Lockstep generation. prompts: (B, S) int32.
+    Returns (tokens (B, gen), stats dict)."""
     import dataclasses
 
     if not h2eal:
@@ -69,15 +87,89 @@ def generate(cfg, params, prompts, *, gen: int, capacity: int,
     return jnp.stack(outs, axis=1), stats
 
 
+def make_ragged_requests(cfg, *, n: int, prompt_buckets, gen_min: int,
+                         gen_max: int, seed: int = 0):
+    """Seeded ragged workload: bucketed prompt lengths, variable gen."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n):
+        s = int(rng.choice(prompt_buckets))
+        g = int(rng.integers(gen_min, gen_max + 1))
+        prompt = rng.integers(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=prompt, max_new=g))
+    return reqs
+
+
+def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
+               prompt_buckets, report_balance: bool = False):
+    """Serve ``requests`` with the continuous-batching engine.
+
+    Returns (completions, stats dict)."""
+    from repro.serving import Engine
+
+    eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
+                 prompt_buckets=prompt_buckets)
+    completions = eng.run(requests)
+    s = eng.stats
+    stats = {
+        "wall_s": s.wall_s,
+        "tokens_per_s": s.tokens_per_s,
+        "decode_steps": s.decode_steps,
+        "select_steps": s.select_steps,
+        "reuse_steps": s.reuse_steps,
+        "occupancy": s.occupancy,
+        "tokens_out": s.tokens_out,
+        "jit_cache": eng.jit_cache_sizes(),
+    }
+    if report_balance:
+        stats["balance"] = _balance_report(cfg, eng)
+    return completions, stats
+
+
+def _balance_report(cfg, eng):
+    """Score the engine's current/last ragged batch with the paper's
+    tiling + co-placement load split on a 4x4 bank grid."""
+    from repro.sched import (grid_coords, imbalance, ragged_loads,
+                             solve_tiling)
+
+    ctx = [int(c) for c in eng.batch.lengths if c > 0]
+    if not ctx:
+        return {}
+    coords = grid_coords(4, 4)[: cfg.num_kv_heads]
+    spec_nr = max(cfg.num_kv_heads
+                  - round(cfg.num_kv_heads * cfg.h2eal.static_sparsity), 0)
+    retr, stream = coords[:spec_nr], coords[spec_nr:]
+    tiles, _ = solve_tiling(retr, stream)
+    kinds = {c: ("retrieval" if c in retr else "streaming") for c in coords}
+    u = ragged_loads(tiles, kinds, cfg.h2eal, ctx, balanced=False)
+    b = ragged_loads(tiles, kinds, cfg.h2eal, ctx, balanced=True)
+    return {"imbalance_naive": imbalance(u),
+            "imbalance_coplaced": imbalance(b)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--workload", choices=["uniform", "ragged"],
+                    default="uniform")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--h2eal", choices=["on", "off"], default="on")
     ap.add_argument("--seed", type=int, default=0)
+    # ragged-workload knobs
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-buckets", default="32,64",
+                    help="comma-separated allowed prompt lengths")
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="cache capacity in tokens (0 = auto)")
+    ap.add_argument("--report-balance", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -85,6 +177,33 @@ def main(argv=None):
         cfg = reduced(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
+
+    if args.workload == "ragged":
+        buckets = [int(x) for x in args.prompt_buckets.split(",")]
+        capacity = args.capacity or (
+            max(buckets) + args.gen_max + cfg.h2eal.page_size)
+        reqs = make_ragged_requests(
+            cfg, n=args.requests, prompt_buckets=buckets,
+            gen_min=args.gen_min, gen_max=args.gen_max, seed=args.seed)
+        completions, stats = run_ragged(
+            cfg, params, reqs, max_batch=args.max_batch, capacity=capacity,
+            prompt_buckets=buckets, report_balance=args.report_balance)
+        print(f"[serve] arch={cfg.name} workload=ragged "
+              f"requests={len(completions)} steps={stats['decode_steps']} "
+              f"occupancy={stats['occupancy']:.2f} "
+              f"({stats['tokens_per_s']:.1f} tok/s)")
+        print(f"[serve] select/reuse steps: {stats['select_steps']}/"
+              f"{stats['reuse_steps']}; jit compiles: {stats['jit_cache']}")
+        if "balance" in stats and stats["balance"]:
+            print(f"[serve] bank imbalance naive="
+                  f"{stats['balance']['imbalance_naive']:.2f} "
+                  f"coplaced={stats['balance']['imbalance_coplaced']:.2f}")
+        if completions:
+            some = completions[min(completions)]
+            print(f"[serve] sample tokens (uid {some.uid}): "
+                  f"{some.tokens[:16]}")
+        return stats
+
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     toks, stats = generate(

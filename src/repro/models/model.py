@@ -143,11 +143,19 @@ def prefill(cfg: ArchConfig, params, batch, *, capacity: int, plan=None,
 
 
 def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
-                do_select: bool = True, impl: str = "ref", layout=None):
+                do_select: bool = True, impl: str = "ref", layout=None,
+                active=None, need_select=None):
     """One decode step.
 
     token: (B,) int32 (or (B, frontend_dim) embeddings for stub archs).
     Returns (logits (B, V), new state).
+
+    ``state["length"]`` is a scalar on the uniform (lockstep) path and a
+    (B,) per-slot vector on the continuous-batching ragged path, where
+    ``active`` ((B,) bool) marks live slots — inactive slots neither
+    append to their caches nor advance their length — and ``need_select``
+    ((B,) bool, select variant only) is the per-slot share-window phase
+    mask. Logits of inactive slots are garbage and must be ignored.
     """
     plan = plan if plan is not None else T.default_plan(cfg)
     length = state["length"]
@@ -155,8 +163,9 @@ def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
         x = token
     else:
         x = jnp.take(params["embed"], token, axis=0)
-    rope1 = _rope(cfg, length[None])  # (1, half) at position `length`
-    rope1 = (rope1[0][None], rope1[1][None])  # (1, 1, half) broadcast form
+    # rope at each slot's own position: (1, half) lockstep / (B, half) ragged
+    rope1 = _rope(cfg, jnp.reshape(length, (-1,)))
+    rope1 = (rope1[0][:, None], rope1[1][:, None])  # (·, 1, half) broadcast
     n_per, n_rem = T.layer_layout(cfg)
     p_len = T.period_len(cfg)
 
@@ -168,11 +177,15 @@ def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
                                   plan_p[f"pos{pos}"], x, rope1,
                                   cache_p[f"pos{pos}"], length=length,
                                   do_select=do_select, impl=impl,
-                                  layout=layout)
+                                  layout=layout, active=active,
+                                  need_select=need_select)
             new_caches[f"pos{pos}"] = c
         return x, new_caches
 
-    new_state: dict[str, Any] = {"length": length + 1, "blocks": {},
+    new_len = length + 1
+    if active is not None:
+        new_len = jnp.where(active, new_len, length)
+    new_state: dict[str, Any] = {"length": new_len, "blocks": {},
                                  "rem": {}}
     if n_per > 0:
         x, caches = jax.lax.scan(
@@ -183,7 +196,8 @@ def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
         x, c = T.block_decode(cfg, r, params["rem"][f"rem{r}"],
                               plan["rem"][f"rem{r}"], x, rope1,
                               state["rem"][f"rem{r}"], length=length,
-                              do_select=do_select, impl=impl, layout=layout)
+                              do_select=do_select, impl=impl, layout=layout,
+                              active=active, need_select=need_select)
         new_state["rem"][f"rem{r}"] = c
     logits = unembed(cfg, params, x)
     return logits, new_state

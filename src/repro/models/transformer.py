@@ -312,8 +312,11 @@ def block_prefill(cfg: ArchConfig, pos: int, p, plan, x, rope, *,
 
 
 def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
-                 length, do_select: bool, impl="ref", layout=None):
-    """Decode one token. x: (B, d)."""
+                 length, do_select: bool, impl="ref", layout=None,
+                 active=None, need_select=None):
+    """Decode one token. x: (B, d). ``length`` is scalar (lockstep) or
+    (B,) per-slot (continuous batching); ``active``/``need_select`` are the
+    ragged path's per-slot masks (see core/hybrid_attention.py)."""
     from repro.runtime import hints
     p = hints.unshard_block_params(p)
     mixer = cfg.mixer_for_layer(pos)
@@ -329,17 +332,19 @@ def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
         v = hints.decode_qkv(v)
         if "full" in cache:
             o, full = hattn.full_decode_attention(
-                spec, q, k, v, cache["full"], length)
+                spec, q, k, v, cache["full"], length, active=active)
             cache = {"full": full}
         elif layout == "coplace_shmap":
             o, paged, stream = hattn.decode_attention_coplace(
                 spec, q, k, v, cache["paged"], cache["stream"], length,
-                do_select=do_select, perm=plan["perm"])
+                do_select=do_select, perm=plan["perm"], active=active,
+                need_select=need_select)
             cache = {"paged": paged, "stream": stream}
         else:
             o, paged, stream = hattn.decode_attention(
                 spec, q, k, v, cache["paged"], cache["stream"], length,
-                do_select=do_select, perm=plan["perm"])
+                do_select=do_select, perm=plan["perm"], active=active,
+                need_select=need_select)
             cache = {"paged": paged, "stream": stream}
         b = o.shape[0]
         x = x + dense(o.reshape(b, -1), p["wo"])

@@ -1,0 +1,73 @@
+"""Version compatibility shims for the pinned jax (0.4.37).
+
+Two jax 0.5+ APIs leak into this codebase's sharding plumbing and tests:
+
+  * ``jax.sharding.get_abstract_mesh`` — explicit-sharding mode's ambient
+    abstract mesh. Under 0.4.x there is no abstract mesh; the only ambient
+    mesh is the physical one in thread resources, so the correct degraded
+    behavior is "no abstract mesh" (return None) and let callers fall back
+    to the physical-mesh lookup.
+  * ``jax.sharding.AxisType`` + the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` — axis kinds (Auto/Explicit) for the explicit-
+    sharding rollout. 0.4.x meshes are implicitly all-Auto, which is
+    exactly what every call site here wants, so the degraded behavior is
+    to omit the kwarg.
+
+Keep ALL version probing in this module: call sites use
+``get_abstract_mesh()`` / ``make_mesh()`` unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+
+#: jax.sharding.AxisType when available (jax >= 0.5), else None.
+AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when unsupported / unset.
+
+    jax >= 0.5 returns an (possibly empty) AbstractMesh; callers should
+    treat both None and ``mesh.empty`` as "no abstract mesh".
+    """
+    if _GET_ABSTRACT_MESH is None:
+        return None
+    try:
+        return _GET_ABSTRACT_MESH()
+    except Exception:
+        return None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across the 0.4 → 0.5 API move.
+
+    jax >= 0.5 exposes top-level ``jax.shard_map`` with ``check_vma``;
+    0.4.x has ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+    ``check`` maps onto whichever knob exists.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
+def make_mesh(shape, axis_names, *, auto_axes: bool = True):
+    """``jax.make_mesh`` that requests Auto axis types where supported.
+
+    Under jax 0.4.x (no AxisType) the kwarg is omitted — 0.4.x meshes are
+    implicitly auto-sharded, so behavior is identical.
+    """
+    if AXIS_TYPE is not None and auto_axes:
+        try:
+            return jax.make_mesh(
+                shape, axis_names,
+                axis_types=(AXIS_TYPE.Auto,) * len(axis_names))
+        except TypeError:
+            pass  # make_mesh predates axis_types despite AxisType existing
+    return jax.make_mesh(shape, axis_names)

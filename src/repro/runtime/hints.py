@@ -43,10 +43,13 @@ def sharding_hints(on: bool = True):
 
 
 def _axes():
-    # the abstract mesh is only set in explicit-sharding mode; inside a
-    # plain `with mesh:` context the physical mesh lives in thread
-    # resources (constraints with bare PartitionSpecs resolve against it)
-    am = jax.sharding.get_abstract_mesh()
+    # the abstract mesh is only set in explicit-sharding mode (jax >= 0.5;
+    # None under the pinned 0.4.x); inside a plain `with mesh:` context the
+    # physical mesh lives in thread resources (constraints with bare
+    # PartitionSpecs resolve against it)
+    from repro.runtime.compat import get_abstract_mesh
+
+    am = get_abstract_mesh()
     if am is not None and not am.empty:
         return am.axis_names
     try:

@@ -41,6 +41,28 @@ def make_decode_step(cfg: ArchConfig, scfg: ServeConfig, *, do_select: bool):
     return decode
 
 
+def make_ragged_decode_step(cfg: ArchConfig, scfg: ServeConfig, *,
+                            do_select: bool):
+    """Decode step for the continuous-batching engine (repro.serving).
+
+    ``state["length"]`` is per-slot (B,); ``active`` masks live slots. The
+    select variant additionally takes ``need_select`` — the per-slot
+    share-window phase mask — so each slot refreshes its page selection on
+    its own cadence while sharing one compiled program.
+    """
+    if do_select:
+        def decode(params, state, token, active, need_select):
+            return M.decode_step(cfg, params, state, token, do_select=True,
+                                 impl=scfg.impl, layout=scfg.layout,
+                                 active=active, need_select=need_select)
+    else:
+        def decode(params, state, token, active):
+            return M.decode_step(cfg, params, state, token, do_select=False,
+                                 impl=scfg.impl, layout=scfg.layout,
+                                 active=active)
+    return decode
+
+
 def jit_serve_steps(cfg: ArchConfig, scfg: ServeConfig, mesh: Mesh, params,
                     state, batch_size: int):
     """Returns (prefill_fn, decode_select_fn, decode_reuse_fn) jitted with

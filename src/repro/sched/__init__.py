@@ -10,5 +10,9 @@ from repro.sched.balance import (  # noqa: F401
     balanced_loads,
     head_load,
     imbalance,
+    occupancy,
+    ragged_head_load,
+    ragged_loads,
+    slot_head_load,
     unbalanced_loads,
 )

@@ -61,3 +61,63 @@ def imbalance(loads: Sequence[BankLoad]) -> float:
     vals = [x.load for x in loads]
     mean = sum(vals) / len(vals)
     return max(vals) / mean if mean > 0 else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Ragged batches (continuous batching, repro/serving)
+#
+# The uniform model above assumes every sequence in the batch sits at the
+# same (long) context. Under continuous batching each slot has its own
+# context length: short slots haven't filled their sink+local windows yet,
+# and a retrieval head's selected budget is capped by how much selectable
+# KV exists. These per-slot loads let the tiling/assignment (and the hbsim
+# cycle model) score the batch the engine is actually serving.
+# ---------------------------------------------------------------------------
+
+
+def slot_head_load(kind: str, h2: H2ealConfig, ctx: int) -> float:
+    """Tokens of KV touched per decode step for one head of ONE slot at
+    context length ``ctx`` (uniform `head_load` is the ctx→∞ limit, up to
+    its externally-supplied metadata page count)."""
+    ctx = int(ctx)
+    if kind == "streaming":
+        return float(min(ctx, h2.sink + h2.local))
+    live_pages = -(-ctx // h2.page_size)
+    meta_cost = 2.0 * live_pages / h2.page_size
+    return float(min(ctx, h2.sink + h2.local + h2.select_budget)) + meta_cost
+
+
+def ragged_head_load(kind: str, h2: H2ealConfig,
+                     ctx_lengths: Sequence[int]) -> float:
+    """Total per-step load of one head over a ragged batch (sum of the
+    batch's live slots; pass only active slots' lengths)."""
+    return sum(slot_head_load(kind, h2, c) for c in ctx_lengths)
+
+
+def ragged_loads(tiles: Sequence[Tile], kinds: Dict[tuple, str],
+                 h2: H2ealConfig, ctx_lengths: Sequence[int],
+                 *, balanced: bool = True) -> List[BankLoad]:
+    """Per-bank loads for a ragged batch.
+
+    balanced=True spreads each tile's total across its members (the
+    co-placement split is exact for any page selection AND any per-slot
+    length, since interleaved storage stripes every slot's pages the same
+    way); balanced=False is the naive one-head-per-bank placement.
+    """
+    out: List[BankLoad] = []
+    for t in tiles:
+        members = t.members
+        per_head = {b: ragged_head_load(kinds[b], h2, ctx_lengths)
+                    for b in members}
+        if balanced:
+            share = sum(per_head.values()) / len(members)
+            out.extend(BankLoad(bank=b, load=share) for b in members)
+        else:
+            out.extend(BankLoad(bank=b, load=per_head[b]) for b in members)
+    return out
+
+
+def occupancy(active: Sequence[bool]) -> float:
+    """Fraction of batch slots currently serving a request."""
+    n = len(active)
+    return sum(bool(a) for a in active) / n if n else 0.0

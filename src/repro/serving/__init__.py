@@ -1,0 +1,9 @@
+"""Continuous-batching serving engine on top of the H²EAL step triple."""
+from repro.serving.engine import (  # noqa: F401
+    BatchState,
+    Completion,
+    Engine,
+    EngineStats,
+    Request,
+    jit_cache_size,
+)

@@ -1,0 +1,377 @@
+"""Slot-based continuous batching over the compiled H²EAL step triple.
+
+The lockstep loop in ``launch/serve.py`` forces every request in a batch
+to share one prompt length and one generation length — exactly the
+workload imbalance the paper's load-balancing scheduler (§IV-C) targets
+at the bank level, replayed at the batch level. This engine removes the
+lockstep:
+
+  * ``BatchState`` holds a **fixed max-batch** compiled decode shape:
+    per-slot caches, a per-slot ``length`` (B,) vector threaded through
+    cache appends / attention validity (core/cache.py,
+    core/hybrid_attention.py), a per-slot ``active`` mask, and a per-slot
+    share-window ``phase``.
+  * Admission = **prefill-then-pack**: an incoming request is prefilled
+    at batch 1 (compiled once per prompt bucket), then its serve state is
+    packed into a free slot of the batched state with a single donated
+    ``dynamic_update_slice`` tree op — a dynamic slot index, so admission
+    never recompiles.
+  * Retirement flips ``active`` off; the slot's caches stay bit-stable
+    (appends are masked) until the next admission overwrites them.
+  * Page selection refreshes on the shared share-window clock (global
+    step % w == 0, the paper's LServe-style shared selection) plus once
+    at each slot's first decode step (phase == 0), and the ``select``
+    variant applies the fresh selection **only** to slots whose refresh
+    is due (``need_select`` blending). A slot's refresh schedule is
+    therefore a function of its own admission step and the global clock
+    alone — its decode logits are invariant to other slots joining or
+    leaving (the co-placement exactness argument applied to continuous
+    batching; tested in tests/test_serving.py).
+  * The decode loop never blocks on the device: retirement is
+    budget-driven, so generated tokens are left on device (one (B,)
+    vector per step) and extracted once at the end of ``run()``
+    (``finalize()``). The host loop dispatches steps back-to-back just
+    like the lockstep driver.
+
+After warmup (one prefill compile per prompt bucket + the two decode
+variants + pack), the steady state runs with zero recompiles regardless
+of how requests arrive — verified via jit cache-miss counts in
+benchmarks/serve_throughput.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.runtime import serve as serve_rt
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``prompt`` length must be one of the
+    engine's prompt buckets (pad upstream; the padded prompt is canonical)."""
+
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: List[int]            # filled by Engine.finalize()
+    admitted_step: int
+    finished_step: int = -1
+    # device-side bookkeeping until finalize():
+    _first_tok: object = None    # device scalar from the prefill logits
+    _slot: int = -1
+    _step_idx: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    decode_steps: int = 0
+    select_steps: int = 0
+    reuse_steps: int = 0
+    prefills: int = 0
+    tokens_out: int = 0
+    occupancy_sum: float = 0.0   # sum over steps of live-slot fraction
+    wall_s: float = 0.0          # set by run()
+
+    @property
+    def occupancy(self) -> float:
+        return self.occupancy_sum / max(self.decode_steps, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class BatchState:
+    """Host view of the batched serve state.
+
+    ``serve`` is the device pytree (per-slot caches + (B,) length);
+    the numpy arrays mirror per-slot scheduling metadata the host loop
+    needs without device round-trips.
+    """
+
+    serve: dict                  # model serve state, length: (B,) int32
+    active: np.ndarray           # (B,) bool
+    lengths: np.ndarray          # (B,) int64 — host mirror of serve length
+    phase: np.ndarray            # (B,) int64 — decode steps since admission
+    uid: np.ndarray              # (B,) int64 — -1 when free
+    remaining: np.ndarray        # (B,) int64 — generation budget left
+
+    @property
+    def max_batch(self) -> int:
+        return self.active.shape[0]
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.max_batch) if not self.active[i]]
+
+
+def jit_cache_size(fn) -> int:
+    """Number of compiled entries behind a jax.jit function (recompile
+    counter for the no-recompiles-after-warmup check); -1 if unknown."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
+def _pack_slot(big: dict, small: dict, slot):
+    """Write the batch-1 serve state ``small`` into slot ``slot`` of the
+    batched state ``big``. Slot index is dynamic — one compile total.
+
+    Leaf batch axis: 1 for scan-stacked "blocks" leaves, else 0;
+    "length" is scalar in ``small`` and (B,) in ``big``.
+    """
+    def upd(path, bg, sm):
+        ps = jax.tree_util.keystr(path)
+        if ps.endswith("['length']"):
+            return jax.lax.dynamic_update_slice(
+                bg, jnp.reshape(sm, (1,)).astype(bg.dtype), (slot,))
+        axis = 1 if "['blocks']" in ps else 0
+        start = (0,) * axis + (slot,) + (0,) * (bg.ndim - axis - 1)
+        return jax.lax.dynamic_update_slice(bg, sm.astype(bg.dtype), start)
+
+    return jax.tree_util.tree_map_with_path(upd, big, small)
+
+
+class Engine:
+    """Continuous-batching engine. See module docstring.
+
+    Parameters
+    ----------
+    cfg, params : model config + parameters.
+    max_batch   : number of slots (the compiled decode batch).
+    capacity    : max context tokens any slot may reach (cache size).
+    prompt_buckets : allowed prompt lengths; one prefill compile each.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
+                 capacity: int, prompt_buckets: Sequence[int],
+                 impl: str = "ref", layout: Optional[str] = None):
+        if layout == "coplace_shmap":
+            raise NotImplementedError(
+                "continuous batching is not supported under coplace_shmap")
+        self.cfg = cfg
+        self.params = params
+        self.capacity = int(capacity)
+        self.prompt_buckets = tuple(sorted(int(b) for b in prompt_buckets))
+        assert self.prompt_buckets, "need at least one prompt bucket"
+        assert self.prompt_buckets[-1] < self.capacity, (
+            f"largest prompt bucket {self.prompt_buckets[-1]} must leave "
+            f"room to decode within capacity {self.capacity}")
+        self.share_window = max(cfg.h2eal.share_window, 1)
+        scfg = serve_rt.ServeConfig(capacity=self.capacity, layout=layout,
+                                    impl=impl)
+        self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
+        self._dec_sel = jax.jit(
+            serve_rt.make_ragged_decode_step(cfg, scfg, do_select=True),
+            donate_argnums=(1,))
+        self._dec_reuse = jax.jit(
+            serve_rt.make_ragged_decode_step(cfg, scfg, do_select=False),
+            donate_argnums=(1,))
+        self._pack = jax.jit(_pack_slot, donate_argnums=(0,))
+
+        self.batch = self._init_batch_state(max_batch)
+        self._tok = jnp.zeros((max_batch,), jnp.int32)   # next-token feed
+        self._act_dev = jnp.zeros((max_batch,), bool)    # device active mask
+        self._act_dirty = False
+        self._trace: List[jax.Array] = []                # (B,) per step
+        self._queue: deque[Request] = deque()
+        self._live: Dict[int, Completion] = {}       # slot -> in-flight
+        self.completions: Dict[int, Completion] = {}  # uid -> finished
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------------
+    # state construction
+    # ------------------------------------------------------------------
+
+    def _init_batch_state(self, max_batch: int) -> BatchState:
+        """All-free batched state. Cache contents are irrelevant until a
+        slot is admitted (pack overwrites every leaf row), so zeros are
+        fine — validity masks keep the math NaN-free."""
+        cfg = self.cfg
+        if cfg.embed_frontend_stub:
+            probe = jax.ShapeDtypeStruct(
+                (max_batch, self.prompt_buckets[0], cfg.d_model), jnp.float32)
+        else:
+            probe = jax.ShapeDtypeStruct(
+                (max_batch, self.prompt_buckets[0]), jnp.int32)
+        shapes = jax.eval_shape(
+            lambda p, b: M.prefill(cfg, p, b, capacity=self.capacity),
+            self.params, probe)[1]
+        serve = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        serve["length"] = jnp.zeros((max_batch,), jnp.int32)
+        return BatchState(
+            serve=serve,
+            active=np.zeros((max_batch,), bool),
+            lengths=np.zeros((max_batch,), np.int64),
+            phase=np.zeros((max_batch,), np.int64),
+            uid=np.full((max_batch,), -1, np.int64),
+            remaining=np.zeros((max_batch,), np.int64),
+        )
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        if len(req.prompt) not in self.prompt_buckets:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} not in buckets "
+                f"{self.prompt_buckets}; pad upstream")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new} "
+                             f"(every admitted request emits at least the "
+                             f"prefill token)")
+        self._queue.append(req)
+
+    def _admit_one(self, req: Request, slot: int):
+        prompt = jnp.asarray(np.asarray(req.prompt)[None])  # (1, S)
+        logits, small = self._prefill(self.params, prompt)
+        self.stats.prefills += 1
+        self.batch.serve = self._pack(self.batch.serve, small,
+                                      jnp.int32(slot))
+        first = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        self._tok = self._tok.at[slot].set(first)
+        b = self.batch
+        b.active[slot] = True
+        self._act_dirty = True
+        b.lengths[slot] = len(req.prompt)
+        b.phase[slot] = 0          # select on the slot's first decode step
+        b.uid[slot] = req.uid
+        comp = Completion(uid=req.uid, prompt_len=len(req.prompt),
+                          tokens=[],
+                          admitted_step=self.stats.decode_steps)
+        comp._first_tok = first
+        comp._slot = slot
+        self._live[slot] = comp
+        self.stats.tokens_out += 1
+        b.remaining[slot] = req.max_new - 1
+        # next append writes at position lengths[slot]; valid while < capacity
+        if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
+            self._retire(slot)
+
+    def _retire(self, slot: int):
+        b = self.batch
+        b.active[slot] = False
+        self._act_dirty = True
+        b.uid[slot] = -1
+        b.remaining[slot] = 0
+        comp = self._live.pop(slot)
+        comp.finished_step = self.stats.decode_steps
+        self.completions[comp.uid] = comp
+
+    def _admit(self):
+        for slot in self.batch.free_slots():
+            if not self._queue:
+                break
+            self._admit_one(self._queue.popleft(), slot)
+
+    # ------------------------------------------------------------------
+    # decode loop
+    # ------------------------------------------------------------------
+
+    def step(self):
+        """One batched decode step over the live slots (non-blocking)."""
+        b = self.batch
+        active = b.active.copy()
+        if not active.any():
+            return
+        step_idx = self.stats.decode_steps
+        # selection refresh: shared clock + each slot's first decode step
+        need = active & ((b.phase == 0)
+                         | (step_idx % self.share_window == 0))
+        if self._act_dirty:
+            self._act_dev = jnp.asarray(active)
+            self._act_dirty = False
+        act_dev = self._act_dev
+        if need.any():
+            logits, b.serve = self._dec_sel(
+                self.params, b.serve, self._tok, act_dev, jnp.asarray(need))
+            self.stats.select_steps += 1
+        else:
+            logits, b.serve = self._dec_reuse(
+                self.params, b.serve, self._tok, act_dev)
+            self.stats.reuse_steps += 1
+        self._tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._trace.append(self._tok)
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += float(active.mean())
+        for slot in np.nonzero(active)[0]:
+            b.lengths[slot] += 1
+            b.phase[slot] += 1
+            comp = self._live[slot]
+            comp._step_idx.append(step_idx)
+            self.stats.tokens_out += 1
+            b.remaining[slot] -= 1
+            if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
+                self._retire(slot)
+
+    def finalize(self):
+        """Materialize completion tokens from the device-side trace.
+        Idempotent; the only device sync in the serving loop."""
+        if self._trace:
+            trace = np.asarray(jnp.stack(self._trace))      # (T, B)
+        else:
+            trace = np.zeros((0, self.batch.max_batch), np.int32)
+        for comp in list(self.completions.values()) + list(
+                self._live.values()):
+            if comp.tokens:
+                continue  # already materialized
+            toks = [int(np.asarray(comp._first_tok))]
+            toks.extend(int(trace[t, comp._slot]) for t in comp._step_idx)
+            comp.tokens = toks
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> Dict[int, Completion]:
+        """Drain: admit + decode until queue and slots are empty."""
+        for r in requests or ():
+            self.submit(r)
+        t0 = time.time()
+        while self._queue or self.batch.active.any():
+            self._admit()
+            self.step()
+        jax.block_until_ready(self.batch.serve["length"])
+        self.stats.wall_s += time.time() - t0
+        self.finalize()
+        return self.completions
+
+    def reset_metrics(self):
+        """Zero stats/completions/trace between a warmup and a measured
+        phase. Only legal when idle (no queued or in-flight requests)."""
+        assert not self._queue and not self._live, (
+            "reset_metrics() requires an idle engine")
+        self.finalize()           # materialize anything still deferred
+        self._trace.clear()
+        self.completions = {}
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def context_lengths(self) -> np.ndarray:
+        """Per-slot context lengths of live slots (for sched/balance)."""
+        return self.batch.lengths[self.batch.active].copy()
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        return {
+            "prefill": jit_cache_size(self._prefill),
+            "decode_select": jit_cache_size(self._dec_sel),
+            "decode_reuse": jit_cache_size(self._dec_reuse),
+            "pack": jit_cache_size(self._pack),
+        }

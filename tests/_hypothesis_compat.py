@@ -1,0 +1,84 @@
+"""Hypothesis shim: real property testing when `hypothesis` is installed,
+seeded example-based degradation when it is not.
+
+The tier-1 environment pins only runtime deps; `hypothesis` lives in the
+dev extra (see pyproject.toml / requirements-dev.txt). Collection must
+succeed either way, so property tests import from this module:
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed these are the real objects. Without it,
+``@given`` degrades to running the test over a deterministic handful of
+drawn examples per strategy — always including the strategy bounds, plus
+seeded random draws — and ``@settings`` only caps the number of examples.
+Only the strategy surface this repo uses is shimmed (integers, floats).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _SHIM_EXAMPLES = 12  # draws per strategy when degraded (incl. bounds)
+
+    class _Strategy:
+        def __init__(self, lo, hi, draw):
+            self.lo, self.hi, self._draw = lo, hi, draw
+
+        def examples(self, rng, n):
+            out = [self.lo, self.hi]
+            out.extend(self._draw(rng) for _ in range(max(n - 2, 0)))
+            return out[:n]
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(min_value, max_value,
+                             lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(min_value, max_value,
+                             lambda rng: rng.uniform(min_value, max_value))
+
+    st = _StrategiesShim()
+
+    def given(**strategies):
+        def deco(fn):
+            def run(*args, **kwargs):
+                n = min(getattr(run, "_shim_max_examples", _SHIM_EXAMPLES),
+                        _SHIM_EXAMPLES)
+                rng = random.Random(f"hyp-shim:{fn.__module__}.{fn.__name__}")
+                names = sorted(strategies)
+                drawn = {k: strategies[k].examples(rng, n) for k in names}
+                for i in range(n):
+                    ex = {k: drawn[k][i] for k in names}
+                    try:
+                        fn(*args, **dict(kwargs, **ex))
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (hypothesis shim): {ex}"
+                        ) from e
+            # hide the strategy params from pytest's fixture resolution
+            # (functools.wraps would re-expose them via __wrapped__)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return run
+        return deco
+
+    def settings(*, max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._shim_max_examples = max_examples
+            return fn
+        return deco

@@ -17,9 +17,9 @@ from repro.core.hybrid_attention import (AttnSpec, init_decode_state,
                                          decode_attention_coplace)
 from repro.configs.base import H2ealConfig
 from repro.runtime.hints import sharding_hints
+from repro.runtime.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 B, Hq, Hkv, D = 2, 4, 2, 32
 S, P_, sink, local = 96, 8, 2, 16
 h2 = H2ealConfig(sink=sink, local=local, page_size=P_, select_budget=32,
