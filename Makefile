@@ -1,5 +1,5 @@
 # Reproduce the tier-1 green state with one command.
-.PHONY: test test-fast bench-serve
+.PHONY: test test-fast bench-serve docs-check
 
 # full suite (the roadmap's tier-1 command)
 test:
@@ -8,6 +8,10 @@ test:
 # fast path: skip the slow multi-device subprocess tests
 test-fast:
 	FAST=1 ./scripts/ci.sh
+
+# dead-link / missing-file check over *.md and module docstrings
+docs-check:
+	python scripts/check_docs.py
 
 # continuous-batching throughput benchmark (CPU reduced config)
 bench-serve:

@@ -15,7 +15,16 @@ tok/s is directly comparable. The engine also must not recompile after
 warmup: jit cache sizes are captured post-warmup and asserted stable
 through the measured phase.
 
+``--layout coplace_shmap`` additionally runs the engine under shard_map
+memory-compute co-placement (pages sharded over the mesh 'model' axis,
+paper §IV-B) with balance-aware admission, on a host-local mesh over all
+visible devices — the multi-device perf row. The no-recompile check
+applies there too. Force a multi-device CPU run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py
+     PYTHONPATH=src python benchmarks/serve_throughput.py \
+         --layout coplace_shmap
 """
 from __future__ import annotations
 
@@ -74,11 +83,11 @@ def make_lockstep_runner(cfg, params, *, capacity):
 
 
 def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
-               reps=1):
+               reps=1, layout=None, admission="fifo"):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
-                 prompt_buckets=buckets)
+                 prompt_buckets=buckets, layout=layout, admission=admission)
     # warmup: touch every prompt bucket and both decode variants
     warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
                     max_new=cfg.h2eal.share_window + 2)
@@ -112,7 +121,7 @@ def dataclass_copy(x):
 
 
 def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
-        gen_max=40, seed=0, reps=3):
+        gen_max=40, seed=0, reps=3, layout=None):
     from repro.configs import get_arch, reduced
     from repro.models import model as M
 
@@ -131,12 +140,16 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
                 for _ in range(max(reps, 1))), key=lambda r: r["wall_s"])
     lock["tokens_per_step"] = (lock["useful_tokens"]
                                / max(lock["decode_steps"], 1))
+    admission = "balanced" if layout == "coplace_shmap" else "fifo"
     rag = run_engine(cfg, params, reqs, max_batch=max_batch,
-                     capacity=capacity, buckets=buckets, reps=reps)
+                     capacity=capacity, buckets=buckets, reps=reps,
+                     layout=layout, admission=admission)
 
+    tag = layout or "default"
     ratio = rag["tokens_per_s"] / lock["tokens_per_s"]
     step_ratio = rag["tokens_per_step"] / lock["tokens_per_step"]
     if csv:
+        print(f"serve_throughput,layout,{tag},devices,{len(jax.devices())}")
         print(f"serve_throughput,lockstep_tok_s,{lock['tokens_per_s']:.2f},"
               f"steps,{lock['decode_steps']},tok_per_step,"
               f"{lock['tokens_per_step']:.2f}")
@@ -161,6 +174,11 @@ if __name__ == "__main__":
     ap.add_argument("--gen-max", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--layout", choices=["default", "coplace_shmap"],
+                    default="default",
+                    help="engine serve-cache layout (coplace_shmap = "
+                         "shard_map co-placement + balanced admission)")
     a = ap.parse_args()
     run(requests=a.requests, max_batch=a.max_batch, gen_min=a.gen_min,
-        gen_max=a.gen_max, seed=a.seed, reps=a.reps)
+        gen_max=a.gen_max, seed=a.seed, reps=a.reps,
+        layout=None if a.layout == "default" else a.layout)

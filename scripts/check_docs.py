@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Docs drift check: fail on dead relative markdown links and on
+references to missing repo files in *.md files and module docstrings
+(the way hbsim/sim.py cited an EXPERIMENTS.md that did not exist).
+
+A reference resolves if the path exists relative to the referencing
+file, the repo root, src/, or src/repro/ — or, for bare shorthand like
+``engine.py``, if the basename exists anywhere in the repo. SNIPPETS.md
+and PAPERS.md are skipped (they cite external repos by design).
+"""
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+FILEREF = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]+\.(?:md|py|sh)\b")
+SKIP_BARE = {"SNIPPETS.md", "PAPERS.md"}
+BASENAMES = {p.name for p in ROOT.rglob("*") if ".git" not in p.parts}
+
+
+def resolves(ref: str, base: Path) -> bool:
+    if "://" in ref or ref.startswith("mailto:"):
+        return True
+    roots = (base, ROOT, ROOT / "src", ROOT / "src" / "repro")
+    if any((r / ref).exists() for r in roots):
+        return True
+    return "/" not in ref and ref in BASENAMES
+
+
+def main() -> int:
+    bad = []
+    for md in sorted(ROOT.rglob("*.md")):
+        if ".git" in md.parts:
+            continue
+        text = md.read_text()
+        rel = md.relative_to(ROOT)
+        for m in LINK.finditer(text):
+            if not resolves(m.group(1), md.parent):
+                bad.append(f"{rel}: dead link -> {m.group(1)}")
+        if md.name not in SKIP_BARE:
+            for ref in set(FILEREF.findall(text)):
+                if not resolves(ref, md.parent):
+                    bad.append(f"{rel}: missing file reference -> {ref}")
+    for py in sorted(ROOT.rglob("*.py")):
+        if ".git" in py.parts:
+            continue
+        try:
+            doc = ast.get_docstring(ast.parse(py.read_text())) or ""
+        except SyntaxError:
+            continue
+        for ref in set(FILEREF.findall(doc)):
+            if not resolves(ref, py.parent):
+                bad.append(f"{py.relative_to(ROOT)}: docstring references "
+                           f"missing file -> {ref}")
+    for line in bad:
+        print(f"docs-check: {line}")
+    print(f"docs-check: {'FAIL' if bad else 'OK'} "
+          f"({len(bad)} dead reference(s))")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,4 +9,6 @@ if [[ "${FAST:-0}" == "1" ]]; then
   ARGS+=(-m "not slow")
 fi
 
+python scripts/check_docs.py
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"

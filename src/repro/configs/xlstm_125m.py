@@ -1,8 +1,9 @@
 """xLSTM-125M — sLSTM + mLSTM blocks, attention-free. [arXiv:2405.04517].
 
 12L d_model=768 4H d_ff=0 vocab=50304. Blocks carry their own projections;
-no separate FFN (d_ff=0). H²EAL is inapplicable (no KV cache) — see
-DESIGN.md §Arch-applicability; decode is constant-state.
+no separate FFN (d_ff=0). H²EAL is inapplicable — the recurrent blocks
+hold constant-size state instead of a KV cache, so there is nothing to
+page or sparsify; decode is constant-state.
 """
 from repro.configs.base import (
     ArchConfig, H2ealConfig, MIXER_MLSTM, MIXER_SLSTM, register,

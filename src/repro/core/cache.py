@@ -225,6 +225,88 @@ def paged_cache_append(cache: PagedCache, k_new, v_new, length, active=None):
             start_wr.astype(jnp.int32)))
 
 
+def sharded_paged_append(k_pages, v_pages, tau_min, tau_max, page_start,
+                         k_new, v_new, length, *, page: int, shard_idx,
+                         n_shards: int, active=None):
+    """Owner-shard append for the co-placed (shard_map) paged layout.
+
+    The leaves hold this shard's ``C_loc = C / n_shards`` pages of the
+    interleaved physical layout (paper Fig 7b: logical page ``p`` lives on
+    shard ``p % n_shards``). Only the shard that owns the token's page
+    writes; every other shard returns its leaves bit-unchanged, so the
+    global cache state is exactly the unsharded one, page-permuted.
+
+    ``length`` is a scalar (lockstep) or (B,) per-slot vector (continuous
+    batching); ``active`` masks retired slots on the ragged path the same
+    way as ``paged_cache_append``. Returns the five updated leaves.
+    """
+    from repro.core import paging
+
+    c_loc = k_pages.shape[2]
+    cap = c_loc * n_shards
+    if not _is_ragged(length, active):
+        pg = length // page
+        off = length % page
+        phys = paging.interleave_slot(pg, cap, n_shards)
+        local = phys - shard_idx * c_loc
+        mine = (local >= 0) & (local < c_loc)
+        lc = jnp.clip(local, 0, c_loc - 1)
+        kp2 = jax.lax.dynamic_update_slice(
+            k_pages, k_new[:, :, None, None, :].astype(k_pages.dtype),
+            (0, 0, lc, off, 0))
+        vp2 = jax.lax.dynamic_update_slice(
+            v_pages, v_new[:, :, None, None, :].astype(v_pages.dtype),
+            (0, 0, lc, off, 0))
+        kf = k_new.astype(jnp.float32)[:, :, None, :]
+        sl = lambda a: jax.lax.dynamic_slice(
+            a, (0, 0, lc, 0), (a.shape[0], a.shape[1], 1, a.shape[3]))
+        tmin2 = jax.lax.dynamic_update_slice(
+            tau_min, jnp.minimum(sl(tau_min), kf), (0, 0, lc, 0))
+        tmax2 = jax.lax.dynamic_update_slice(
+            tau_max, jnp.maximum(sl(tau_max), kf), (0, 0, lc, 0))
+        ps2 = jax.lax.dynamic_update_slice(
+            page_start,
+            jnp.broadcast_to(pg * page, page_start.shape[:2])[
+                :, :, None].astype(jnp.int32),
+            (0, 0, lc))
+        return (jnp.where(mine, kp2, k_pages), jnp.where(mine, vp2, v_pages),
+                jnp.where(mine, tmin2, tau_min),
+                jnp.where(mine, tmax2, tau_max),
+                jnp.where(mine, ps2, page_start))
+
+    b, h = k_new.shape[0], k_pages.shape[1]
+    lb = jnp.broadcast_to(length, (b,)).astype(jnp.int32)
+    pg = jnp.clip(lb // page, 0, cap - 1)
+    off = lb % page
+    phys = paging.interleave_slot(pg, cap, n_shards)
+    local = phys - shard_idx * c_loc
+    mine = (local >= 0) & (local < c_loc)
+    lc = jnp.clip(local, 0, c_loc - 1)
+    act = _row_mask(active, b) & mine
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(h)[None, :]
+    pgl = jnp.broadcast_to(lc[:, None], (b, h))
+    of = jnp.broadcast_to(off[:, None], (b, h))
+    a3 = act[:, None, None]
+    k_wr = jnp.where(a3, k_new.astype(k_pages.dtype),
+                     k_pages[bi, hi, pgl, of])
+    v_wr = jnp.where(a3, v_new.astype(v_pages.dtype),
+                     v_pages[bi, hi, pgl, of])
+    kf = k_new.astype(jnp.float32)
+    old_min = tau_min[bi, hi, pgl]
+    old_max = tau_max[bi, hi, pgl]
+    min_wr = jnp.where(a3, jnp.minimum(old_min, kf), old_min)
+    max_wr = jnp.where(a3, jnp.maximum(old_max, kf), old_max)
+    start_wr = jnp.where(act[:, None],
+                         jnp.broadcast_to((pg * page)[:, None], (b, h)),
+                         page_start[bi, hi, pgl])
+    return (k_pages.at[bi, hi, pgl, of].set(k_wr),
+            v_pages.at[bi, hi, pgl, of].set(v_wr),
+            tau_min.at[bi, hi, pgl].set(min_wr),
+            tau_max.at[bi, hi, pgl].set(max_wr),
+            page_start.at[bi, hi, pgl].set(start_wr.astype(jnp.int32)))
+
+
 def pool_append(cache: PagedCache, k_new: Array, v_new: Array, length: Array,
                 *, page: int, sink: int, local: int):
     """Fixed-pool append with eviction (paper §IV-A.3 'memory

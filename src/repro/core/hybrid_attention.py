@@ -351,17 +351,23 @@ def decode_attention_pool(
 
 def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
                           paged: cachelib.PagedCache, length, *,
-                          do_select: bool, mesh, axis: str = "model"):
+                          do_select: bool, mesh, axis: str = "model",
+                          active=None, need_select=None):
     """Retrieval-head decode under interleaved co-placement.
 
     q_r: (B, HqR, D); k_r/v_r: (B, Hr, D) — replicated over `axis`.
     paged leaves sharded on the page dim over `axis` (page dim divisible).
     Returns (out (B,HqR,D), new PagedCache).
+
+    Ragged (continuous-batching) path: ``length`` is (B,) per-slot,
+    ``active`` masks live slots (retired slots neither append nor refresh —
+    their local cache rows are bit-stable on every shard), ``need_select``
+    is the per-slot share-window phase mask for the select variant. The
+    per-slot vectors shard with the batch axis, so each device sees exactly
+    the slots whose pages it co-owns.
     """
     import numpy as np
     from jax.sharding import PartitionSpec as P
-
-    from repro.runtime import hints
 
     h2 = spec.h2
     p_sz = h2.page_size
@@ -375,50 +381,46 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
     b = q_r.shape[0]
     dp = int(np.prod([mesh.shape[a] for a in ba]))
     bspec = ba if b % dp == 0 else None
+    ragged = active is not None or jnp.asarray(length).ndim == 1
 
     rep = P(bspec, None, None)
     cache5 = P(bspec, None, axis, None, None)
     cache4 = P(bspec, None, axis, None)
     cache3 = P(bspec, None, axis)
+    vec = P(bspec)
 
-    def body(q, kn, vn, kp, vp, tmin, tmax, imp, pstart, sel_prev, length):
+    extra_args = ()
+    extra_specs = ()
+    if ragged:
+        length = jnp.broadcast_to(
+            jnp.asarray(length, jnp.int32), (b,))
+        act = (jnp.ones((b,), bool) if active is None
+               else jnp.asarray(active).reshape(b))
+        extra_args = (act,)
+        extra_specs = (vec,)
+        if do_select:
+            need = (jnp.ones((b,), bool) if need_select is None
+                    else jnp.asarray(need_select).reshape(b))
+            extra_args += (need,)
+            extra_specs += (vec,)
+
+    def body(q, kn, vn, kp, vp, tmin, tmax, imp, pstart, sel_prev, length,
+             *extra):
         i = jax.lax.axis_index(axis)
-        ctx = length + 1
-        # ---- append (only the owner shard writes) ----
-        pg = length // p_sz
-        off = length % p_sz
-        phys = paging.interleave_slot(pg, cap_pages, nsh)
-        local = phys - i * c_loc
-        mine = (local >= 0) & (local < c_loc)
-        lc = jnp.clip(local, 0, c_loc - 1)
-        kp2 = jax.lax.dynamic_update_slice(
-            kp, kn[:, :, None, None, :].astype(kp.dtype), (0, 0, lc, off, 0))
-        vp2 = jax.lax.dynamic_update_slice(
-            vp, vn[:, :, None, None, :].astype(vp.dtype), (0, 0, lc, off, 0))
-        kp = jnp.where(mine, kp2, kp)
-        vp = jnp.where(mine, vp2, vp)
-        knf = kn.astype(jnp.float32)[:, :, None, :]
-        sl = lambda a: jax.lax.dynamic_slice(
-            a, (0, 0, lc, 0), (a.shape[0], a.shape[1], 1, a.shape[3]))
-        tmin2 = jax.lax.dynamic_update_slice(
-            tmin, jnp.minimum(sl(tmin), knf), (0, 0, lc, 0))
-        tmax2 = jax.lax.dynamic_update_slice(
-            tmax, jnp.maximum(sl(tmax), knf), (0, 0, lc, 0))
-        tmin = jnp.where(mine, tmin2, tmin)
-        tmax = jnp.where(mine, tmax2, tmax)
-        ps2 = jax.lax.dynamic_update_slice(
-            pstart,
-            jnp.broadcast_to(pg * p_sz, pstart.shape[:2])[:, :, None
-                                                          ].astype(jnp.int32),
-            (0, 0, lc))
-        pstart = jnp.where(mine, ps2, pstart)
+        ctx = length + 1                       # scalar or (B_loc,)
+        act = extra[0] if ragged else None
+        need = extra[1] if (ragged and do_select) else None
+        # ---- append (only the owner shard writes; retired slots masked) --
+        kp, vp, tmin, tmax, pstart = cachelib.sharded_paged_append(
+            kp, vp, tmin, tmax, pstart, kn, vn, length, page=p_sz,
+            shard_idx=i, n_shards=nsh, active=act)
 
         # ---- selection (local score + distributed top-k) ----
         if do_select:
             scores_loc = paging.score_pages(
                 q, tmin, tmax, pstart, ctx, sink=h2.sink, local=h2.local,
                 page=p_sz, impl=spec.impl)          # (B, Hr, C_loc)
-            imp = paging.accumulate_importance(imp, scores_loc)
+            imp_new = paging.accumulate_importance(imp, scores_loc)
             k_eff = min(h2.top_k_pages, c_loc)
             v_loc, i_loc = jax.lax.top_k(scores_loc, k_eff)
             phys_loc = i_loc + i * c_loc
@@ -437,23 +439,21 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
                                jnp.int32)
                 sel = jnp.concatenate([sel.astype(jnp.int32), pad], axis=2)
             sel = sel.astype(jnp.int32)
+            if need is not None:
+                # per-slot share window: slots whose window has not expired
+                # keep their cached selection / importance bit-unchanged
+                ns = need[:, None, None]
+                sel = jnp.where(ns, sel, sel_prev)
+                imp = jnp.where(ns, imp_new, imp)
+            else:
+                imp = imp_new
         else:
             sel = sel_prev
 
         # ---- attended slots (physical) + local partial attention ----
-        n_sink, n_local = paging.page_counts(sink=h2.sink, local=h2.local,
-                                             page=p_sz)
-        sink_log = jnp.arange(n_sink, dtype=jnp.int32)
-        first_local = jnp.maximum(ctx - h2.local, 0) // p_sz
-        local_log = first_local + jnp.arange(n_local, dtype=jnp.int32)
-        fixed_phys = paging.interleave_slot(
-            jnp.concatenate([sink_log, local_log]), cap_pages, nsh)
-        bsz, hr = q.shape[0], kp.shape[1]
-        fixed_phys = jnp.broadcast_to(fixed_phys,
-                                      (bsz, hr, fixed_phys.shape[0]))
-        slots_phys = jnp.concatenate(
-            [fixed_phys[:, :, :n_sink], sel, fixed_phys[:, :, n_sink:]],
-            axis=2)
+        slots_phys = paging.coplace_attended_slots(
+            sel, ctx, sink=h2.sink, local=h2.local, page=p_sz,
+            capacity=cap_pages, n_shards=nsh)
         loc = slots_phys - i * c_loc
         mine_s = (slots_phys >= 0) & (loc >= 0) & (loc < c_loc)
         loc_masked = jnp.where(mine_s, loc, -1)
@@ -476,10 +476,11 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
 
     from repro.runtime.compat import shard_map as _shard_map
 
+    len_spec = vec if ragged else P()
     shard = _shard_map(
         body, mesh=mesh,
         in_specs=(rep, rep, rep, cache5, cache5, cache4, cache4, cache3,
-                  cache3, P(bspec, None, None), P()),
+                  cache3, P(bspec, None, None), len_spec) + extra_specs,
         out_specs=(rep, cache5, cache5, cache4, cache4, cache3, cache3,
                    P(bspec, None, None)),
         check=False,
@@ -487,7 +488,7 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
     out, kpn, vpn, tminn, tmaxn, impn, pstartn, seln = shard(
         q_r, k_r, v_r, paged.k_pages, paged.v_pages, paged.tau_min,
         paged.tau_max, paged.importance, paged.page_start, paged.sel_idx,
-        length)
+        length, *extra_args)
     new_paged = cachelib.PagedCache(
         k_pages=kpn, v_pages=vpn, tau_min=tminn, tau_max=tmaxn,
         importance=impn, page_start=pstartn, sel_idx=seln)
@@ -502,7 +503,13 @@ def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
                              axis: str = "model", active=None,
                              need_select=None):
     """decode_attention with the retrieval heads under shard_map
-    co-placement. Streaming heads use the normal (tiny) path."""
+    co-placement. Streaming heads use the normal (tiny) path.
+
+    Accepts the same ragged-batch arguments as ``decode_attention``
+    (per-slot (B,) ``length``, ``active``, ``need_select``) — this is the
+    path the continuous-batching engine takes under
+    ``layout="coplace_shmap"``.
+    """
     from repro.runtime import hints
 
     mesh = hints.current_mesh()
@@ -510,11 +517,6 @@ def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
         return decode_attention(spec, q, k_new, v_new, paged, stream,
                                 length, do_select=do_select, perm=perm,
                                 active=active, need_select=need_select)
-    if active is not None or jnp.asarray(length).ndim == 1:
-        raise NotImplementedError(
-            "ragged (per-slot) decode is not supported under the "
-            "coplace_shmap layout yet — use the default layout for the "
-            "continuous-batching engine")
     h2 = spec.h2
     g = spec.group
     nr = spec.n_retrieval
@@ -528,13 +530,17 @@ def decode_attention_coplace(spec: AttnSpec, q, k_new, v_new, paged, stream,
     if nr > 0:
         out_r, paged = _paged_decode_coplace(
             spec, qp[:, : nr * g], kp[:, :nr], vp[:, :nr], paged, length,
-            do_select=do_select, mesh=mesh, axis=axis)
+            do_select=do_select, mesh=mesh, axis=axis, active=active,
+            need_select=need_select)
         outs.append(out_r)
     if spec.n_streaming > 0:
         stream = cachelib.stream_cache_append(
-            stream, kp[:, nr:], vp[:, nr:], length, sink=h2.sink)
+            stream, kp[:, nr:], vp[:, nr:], length, sink=h2.sink,
+            active=active)
+        ctx_b = jnp.broadcast_to(jnp.asarray(ctx, jnp.int32),
+                                 (q.shape[0],))[:, None, None]
         valid_s = (stream.pos >= 0) & (
-            (stream.pos < h2.sink) | (stream.pos >= ctx - h2.local))
+            (stream.pos < h2.sink) | (stream.pos >= ctx_b - h2.local))
         outs.append(kops.paged_attention(
             qp[:, nr * g:], stream.k, stream.v, valid_s, impl=spec.impl))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)

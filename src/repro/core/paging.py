@@ -124,6 +124,47 @@ def attended_page_slots(
     return jnp.concatenate([sink_pages, sel_idx, local_pages], axis=2)
 
 
+def coplace_attended_slots(
+    sel_phys: Array,
+    ctx: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+    capacity: int,
+    n_shards: int,
+) -> Array:
+    """`attended_page_slots` for the co-placed (shard_map) layout.
+
+    ``sel_phys`` (B, H, K) holds PHYSICAL slot indices (the distributed
+    top-k already returns physical ids; -1 = sentinel). The fixed sink and
+    local sections are logical page indices mapped through
+    ``interleave_slot``. ``capacity`` is the GLOBAL page count; each shard
+    later subtracts its base offset and masks slots it does not own.
+    ``ctx`` may be a scalar (lockstep) or (B,) (ragged batch).
+
+    Logical local pages past the end of the cache are clamped to the last
+    page — the same page the unsharded path's clamped gather reads — and
+    `token_validity` masks them, so sharded and unsharded attend the same
+    token set.
+    """
+    b, h, _ = sel_phys.shape
+    n_sink, n_local = page_counts(sink=sink, local=local, page=page)
+    ctx = _ctx_batched(ctx, b)
+    first_local = _first_local_page(ctx, local=local, page=page)  # (B,)
+    sink_log = jnp.broadcast_to(jnp.arange(n_sink, dtype=jnp.int32),
+                                (b, n_sink))
+    local_log = first_local[:, None] + jnp.arange(n_local, dtype=jnp.int32)
+    fixed_log = jnp.concatenate([sink_log, local_log], axis=1)
+    fixed_log = jnp.clip(fixed_log, 0, capacity - 1)
+    fixed_phys = interleave_slot(fixed_log, capacity, n_shards)
+    fixed_phys = jnp.broadcast_to(
+        fixed_phys[:, None, :], (b, h, n_sink + n_local)).astype(jnp.int32)
+    return jnp.concatenate(
+        [fixed_phys[:, :, :n_sink], sel_phys.astype(jnp.int32),
+         fixed_phys[:, :, n_sink:]], axis=2)
+
+
 def gather_pages(k_pages: Array, v_pages: Array, slots: Array):
     """k/v_pages: (B, H, C, P, D); slots: (B, H, N) -> (B, H, N*P, D) each."""
     b, h, c, p, d = k_pages.shape
@@ -150,6 +191,11 @@ def token_validity(
     the three sections never overlap even for degenerate selections (short
     contexts where nothing is selectable yet).
     ``ctx`` may be a scalar (uniform batch) or (B,) (ragged batch).
+
+    Sharding-safe: under the co-placed layout ``slots`` are shard-LOCAL
+    slot indices (non-owned slots masked to -1) while ``page_start`` stores
+    ABSOLUTE token positions, so the section math (pidx, first_local) stays
+    in global coordinates and is identical on every shard.
     """
     b, h, n = slots.shape
     n_sink, n_local = page_counts(sink=sink, local=local, page=page)

@@ -17,12 +17,21 @@ occupancy, per-function jit compile counts, and (with
 ``--report-balance``) the sched/balance imbalance score of the final
 ragged batch on a 4x4 bank grid.
 
+``--layout coplace_shmap`` runs the ragged workload under shard_map
+memory-compute co-placement on a host-local mesh (pages sharded over the
+'model' axis; paper §IV-B); ``--admission balanced`` adds the
+balance-aware admission order (sched/balance.admission_score).
+
 CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --reduced --prompt-len 96 --gen 32 --batch 2
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --reduced --workload ragged --requests 8 --max-batch 4 \
       --prompt-buckets 32,64 --gen-min 4 --gen-max 24
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --reduced --workload ragged --layout coplace_shmap \
+      --admission balanced
 """
 from __future__ import annotations
 
@@ -103,14 +112,22 @@ def make_ragged_requests(cfg, *, n: int, prompt_buckets, gen_min: int,
 
 
 def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
-               prompt_buckets, report_balance: bool = False):
+               prompt_buckets, report_balance: bool = False,
+               layout=None, admission: str = "fifo"):
     """Serve ``requests`` with the continuous-batching engine.
 
+    ``layout="coplace_shmap"`` builds a host-local mesh with every device
+    on the 'model' axis and runs the sharded partial-attention decode.
     Returns (completions, stats dict)."""
     from repro.serving import Engine
 
+    if admission == "balanced" and layout != "coplace_shmap":
+        raise ValueError(
+            "--admission balanced scores per-device page load and only has "
+            "an effect when pages are sharded (--layout coplace_shmap)")
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
-                 prompt_buckets=prompt_buckets)
+                 prompt_buckets=prompt_buckets, layout=layout,
+                 admission=admission)
     completions = eng.run(requests)
     s = eng.stats
     stats = {
@@ -121,6 +138,7 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
         "reuse_steps": s.reuse_steps,
         "occupancy": s.occupancy,
         "tokens_out": s.tokens_out,
+        "admission_reorders": s.admission_reorders,
         "jit_cache": eng.jit_cache_sizes(),
     }
     if report_balance:
@@ -130,9 +148,12 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
 
 def _balance_report(cfg, eng):
     """Score the engine's current/last ragged batch with the paper's
-    tiling + co-placement load split on a 4x4 bank grid."""
-    from repro.sched import (grid_coords, imbalance, ragged_loads,
-                             solve_tiling)
+    tiling + co-placement load split on a 4x4 bank grid, plus the sharded
+    page-load view (device_page_loads) and the whole-slot LPT placement
+    (map_slots) the balanced admission policy optimizes against."""
+    from repro.sched import (device_page_loads, grid_coords, imbalance,
+                             load_imbalance, map_slots, ragged_loads,
+                             slot_head_load, solve_tiling)
 
     ctx = [int(c) for c in eng.batch.lengths if c > 0]
     if not ctx:
@@ -145,8 +166,17 @@ def _balance_report(cfg, eng):
     kinds = {c: ("retrieval" if c in retr else "streaming") for c in coords}
     u = ragged_loads(tiles, kinds, cfg.h2eal, ctx, balanced=False)
     b = ragged_loads(tiles, kinds, cfg.h2eal, ctx, balanced=True)
+    n_sh = (int(eng.mesh.shape["model"])
+            if eng.mesh is not None and "model" in eng.mesh.axis_names
+            else 4)
+    pages = device_page_loads(ctx, n_shards=max(n_sh, 1),
+                              page_size=cfg.h2eal.page_size)
+    lpt = map_slots([slot_head_load("retrieval", cfg.h2eal, c) for c in ctx],
+                    max(n_sh, 1))
     return {"imbalance_naive": imbalance(u),
-            "imbalance_coplaced": imbalance(b)}
+            "imbalance_coplaced": imbalance(b),
+            "page_load_imbalance": load_imbalance(pages),
+            "slot_lpt_imbalance": lpt.imbalance}
 
 
 def main(argv=None):
@@ -170,6 +200,15 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=0,
                     help="cache capacity in tokens (0 = auto)")
     ap.add_argument("--report-balance", action="store_true")
+    ap.add_argument("--layout", choices=["auto", "coplace_shmap"],
+                    default="auto",
+                    help="serve-cache layout (ragged workload): "
+                         "coplace_shmap = shard_map co-placement on a "
+                         "host-local mesh")
+    ap.add_argument("--admission", choices=["fifo", "balanced"],
+                    default="fifo",
+                    help="ragged admission order (balanced = per-device "
+                         "page-load aware, sched/balance.py)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -185,19 +224,26 @@ def main(argv=None):
         reqs = make_ragged_requests(
             cfg, n=args.requests, prompt_buckets=buckets,
             gen_min=args.gen_min, gen_max=args.gen_max, seed=args.seed)
+        layout = None if args.layout == "auto" else args.layout
         completions, stats = run_ragged(
             cfg, params, reqs, max_batch=args.max_batch, capacity=capacity,
-            prompt_buckets=buckets, report_balance=args.report_balance)
+            prompt_buckets=buckets, report_balance=args.report_balance,
+            layout=layout, admission=args.admission)
         print(f"[serve] arch={cfg.name} workload=ragged "
+              f"layout={args.layout} admission={args.admission} "
               f"requests={len(completions)} steps={stats['decode_steps']} "
               f"occupancy={stats['occupancy']:.2f} "
               f"({stats['tokens_per_s']:.1f} tok/s)")
         print(f"[serve] select/reuse steps: {stats['select_steps']}/"
-              f"{stats['reuse_steps']}; jit compiles: {stats['jit_cache']}")
+              f"{stats['reuse_steps']}; "
+              f"admission reorders: {stats['admission_reorders']}; "
+              f"jit compiles: {stats['jit_cache']}")
         if "balance" in stats and stats["balance"]:
             print(f"[serve] bank imbalance naive="
                   f"{stats['balance']['imbalance_naive']:.2f} "
-                  f"coplaced={stats['balance']['imbalance_coplaced']:.2f}")
+                  f"coplaced={stats['balance']['imbalance_coplaced']:.2f} "
+                  f"page_load={stats['balance']['page_load_imbalance']:.2f} "
+                  f"slot_lpt={stats['balance']['slot_lpt_imbalance']:.2f}")
         if completions:
             some = completions[min(completions)]
             print(f"[serve] sample tokens (uid {some.uid}): "

@@ -1,4 +1,10 @@
-from repro.sched.mapping import MappingPlan, Stage, map_heads  # noqa: F401
+from repro.sched.mapping import (  # noqa: F401
+    MappingPlan,
+    SlotAssignment,
+    Stage,
+    map_heads,
+    map_slots,
+)
 from repro.sched.tiling import (  # noqa: F401
     Tile,
     grid_coords,
@@ -7,12 +13,16 @@ from repro.sched.tiling import (  # noqa: F401
     solve_tiling,
 )
 from repro.sched.balance import (  # noqa: F401
+    admission_score,
     balanced_loads,
+    device_page_loads,
     head_load,
     imbalance,
+    load_imbalance,
     occupancy,
     ragged_head_load,
     ragged_loads,
     slot_head_load,
+    slot_pages,
     unbalanced_loads,
 )

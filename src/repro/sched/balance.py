@@ -58,9 +58,7 @@ def balanced_loads(tiles: Sequence[Tile], kinds: Dict[tuple, str],
 
 def imbalance(loads: Sequence[BankLoad]) -> float:
     """max/mean load ratio (1.0 = perfectly balanced)."""
-    vals = [x.load for x in loads]
-    mean = sum(vals) / len(vals)
-    return max(vals) / mean if mean > 0 else 1.0
+    return load_imbalance([x.load for x in loads])
 
 
 # ---------------------------------------------------------------------------
@@ -121,3 +119,54 @@ def occupancy(active: Sequence[bool]) -> float:
     """Fraction of batch slots currently serving a request."""
     n = len(active)
     return sum(bool(a) for a in active) / n if n else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Ragged placement scoring (continuous batching under sharded co-placement)
+#
+# Under the interleaved page striping (paper Fig 7b / coplace_shmap), page
+# p of EVERY slot lives on device p % n_shards. A slot with `pages` live
+# pages therefore loads device d with ceil((pages - d) / n_shards) pages —
+# the floor share plus one remainder page on the first `pages % n_shards`
+# devices. Remainders from different slots stack on the SAME low-indexed
+# devices, so a ragged batch is per-device imbalanced by up to one page
+# per slot. Admission can counteract this by picking the queued request
+# whose page count flattens the remainder pile-up (the paper's §IV-C
+# balancing applied to the batch dimension; consumed by
+# serving.Engine(admission="balanced")).
+# ---------------------------------------------------------------------------
+
+
+def slot_pages(ctx: int, page_size: int) -> int:
+    """Live pages of one slot at context length ``ctx``."""
+    return -(-int(ctx) // page_size) if ctx > 0 else 0
+
+
+def device_page_loads(ctx_lengths: Sequence[int], *, n_shards: int,
+                      page_size: int) -> List[int]:
+    """Per-device resident-page counts of a ragged batch under round-robin
+    (interleaved) page→device striping."""
+    loads = [0] * n_shards
+    for ctx in ctx_lengths:
+        pages = slot_pages(ctx, page_size)
+        q, r = divmod(pages, n_shards)
+        for d in range(n_shards):
+            loads[d] += q + (1 if d < r else 0)
+    return loads
+
+
+def load_imbalance(vals: Sequence[float]) -> float:
+    """max/mean of raw load values (1.0 = perfectly balanced)."""
+    vals = list(vals)
+    mean = sum(vals) / len(vals) if vals else 0.0
+    return max(vals) / mean if mean > 0 else 1.0
+
+
+def admission_score(ctx_lengths: Sequence[int], candidate_ctx: int, *,
+                    n_shards: int, page_size: int) -> float:
+    """Per-device page-load imbalance of the batch AFTER admitting a
+    request at context ``candidate_ctx`` next to the live ``ctx_lengths``.
+    Lower is better; the engine admits the queued request minimizing it."""
+    loads = device_page_loads(list(ctx_lengths) + [int(candidate_ctx)],
+                              n_shards=n_shards, page_size=page_size)
+    return load_imbalance(loads)

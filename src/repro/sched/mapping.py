@@ -72,6 +72,46 @@ def _greedy_distinct_divisors(n_h: int, n_b: int) -> List[int] | None:
     return None
 
 
+@dataclass(frozen=True)
+class SlotAssignment:
+    """Whole-slot → bank placement for a ragged batch (used when pages are
+    NOT interleaved, so a slot's KV pins to one bank and the per-bank load
+    is the sum of its slots' loads)."""
+
+    n_banks: int
+    banks: tuple     # tuple[tuple[int, ...]] — slot ids per bank
+    loads: tuple     # per-bank total load
+
+    @property
+    def imbalance(self) -> float:
+        from repro.sched.balance import load_imbalance
+        return load_imbalance(self.loads)
+
+
+def map_slots(slot_loads, n_banks: int) -> SlotAssignment:
+    """Greedy LPT: place the heaviest slot on the least-loaded bank.
+
+    The ragged-batch analogue of `map_heads` — the paper balances a fixed
+    head population across banks (§IV-C.1); a continuous-batching batch
+    additionally has per-SLOT load raggedness (each slot sits at its own
+    context length). LPT is the standard 4/3-approximation for makespan
+    and is what the engine's balance report scores non-interleaved
+    placements with; under interleaved striping the split is exact and
+    this mapping is unnecessary (see sched/balance.py).
+    """
+    assert n_banks >= 1
+    order = sorted(range(len(slot_loads)), key=lambda i: -slot_loads[i])
+    banks: List[List[int]] = [[] for _ in range(n_banks)]
+    loads = [0.0] * n_banks
+    for i in order:
+        b = min(range(n_banks), key=lambda j: loads[j])
+        banks[b].append(i)
+        loads[b] += float(slot_loads[i])
+    return SlotAssignment(n_banks=n_banks,
+                          banks=tuple(tuple(b) for b in banks),
+                          loads=tuple(loads))
+
+
 def map_heads(n_h: int, n_b: int) -> MappingPlan:
     """Compute the stage plan mapping n_h KV heads onto n_b banks."""
     assert n_h >= 1 and n_b >= 1

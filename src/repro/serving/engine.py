@@ -37,9 +37,20 @@ After warmup (one prefill compile per prompt bucket + the two decode
 variants + pack), the steady state runs with zero recompiles regardless
 of how requests arrive — verified via jit cache-miss counts in
 benchmarks/serve_throughput.py.
+
+The engine also runs under the ``coplace_shmap`` layout (paper §IV-B:
+pages sharded over the mesh 'model' axis, each device computing partial
+attention for exactly the pages it stores, merged with a cross-device
+log-sum-exp combine — see core/hybrid_attention.py). The per-slot
+length/active/need_select vectors thread straight through the shard_map
+body, and ``admission="balanced"`` adds the paper's §IV-C load balancing
+at the batch dimension: queued requests are admitted in the order that
+keeps per-device page load flattest (sched/balance.py). See
+docs/serving.md.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -86,6 +97,7 @@ class EngineStats:
     tokens_out: int = 0
     occupancy_sum: float = 0.0   # sum over steps of live-slot fraction
     wall_s: float = 0.0          # set by run()
+    admission_reorders: int = 0  # balanced admission: non-FIFO picks
 
     @property
     def occupancy(self) -> float:
@@ -157,35 +169,84 @@ class Engine:
     max_batch   : number of slots (the compiled decode batch).
     capacity    : max context tokens any slot may reach (cache size).
     prompt_buckets : allowed prompt lengths; one prefill compile each.
+    layout      : serve-cache layout (None = default single-program path;
+                  ``"coplace_shmap"`` = shard_map memory-compute
+                  co-placement — pages sharded over the mesh 'model' axis,
+                  each device computing partial attention for the pages it
+                  stores).
+    mesh        : mesh for ``coplace_shmap`` (defaults to a host-local mesh
+                  with all devices on the 'model' axis). Every jitted call
+                  runs inside this mesh's context so the shard_map path can
+                  see it.
+    admission   : ``"fifo"`` (default) or ``"balanced"`` — balanced looks
+                  at the first ``admit_lookahead`` queued requests and
+                  admits the one that keeps per-device page load most
+                  balanced (sched/balance.admission_score; the paper's
+                  §IV-C balancing applied to the batch dimension).
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
                  capacity: int, prompt_buckets: Sequence[int],
-                 impl: str = "ref", layout: Optional[str] = None):
-        if layout == "coplace_shmap":
-            raise NotImplementedError(
-                "continuous batching is not supported under coplace_shmap")
+                 impl: str = "ref", layout: Optional[str] = None,
+                 mesh=None, admission: str = "fifo",
+                 admit_lookahead: int = 4,
+                 balance_shards: Optional[int] = None):
         self.cfg = cfg
         self.params = params
+        self.layout = layout
+        if layout == "coplace_shmap" and mesh is None:
+            from repro.launch.mesh import make_local_mesh
+            mesh = make_local_mesh(model=len(jax.devices()))
+        self.mesh = mesh
+        assert admission in ("fifo", "balanced"), admission
+        self.admission = admission
+        self.admit_lookahead = max(int(admit_lookahead), 1)
+        # shard count the balanced admission scores against; defaults to
+        # the mesh 'model' size (1 → FIFO). Override for an engine whose
+        # pages are sharded externally (or in tests).
+        self.balance_shards = balance_shards
         self.capacity = int(capacity)
+        # the sharded cache needs a whole number of pages per device; the
+        # retirement boundary stays at the caller's `capacity`
+        self.cache_capacity = self.capacity
+        if layout == "coplace_shmap":
+            quantum = cfg.h2eal.page_size * int(self.mesh.shape["model"])
+            self.cache_capacity = -(-self.capacity // quantum) * quantum
         self.prompt_buckets = tuple(sorted(int(b) for b in prompt_buckets))
         assert self.prompt_buckets, "need at least one prompt bucket"
         assert self.prompt_buckets[-1] < self.capacity, (
             f"largest prompt bucket {self.prompt_buckets[-1]} must leave "
             f"room to decode within capacity {self.capacity}")
         self.share_window = max(cfg.h2eal.share_window, 1)
-        scfg = serve_rt.ServeConfig(capacity=self.capacity, layout=layout,
-                                    impl=impl)
+        scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
+                                    layout=layout, impl=impl)
         self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
+        self.batch = self._init_batch_state(max_batch)
+        # Under coplace_shmap the batched state must live in ONE stable
+        # sharded layout from step 0: otherwise the first decode reshards
+        # it (unsharded zeros in, shard_map layout out) and pack/decode
+        # each compile a second entry AFTER warmup. Pinning out_shardings
+        # keeps every steady-state call on a single compiled program.
+        dec_shard = {}
+        if self.mesh is not None and layout == "coplace_shmap":
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.runtime import sharding as shardlib
+            ss = shardlib.state_shardings(cfg, self.mesh, self.batch.serve,
+                                          layout=layout,
+                                          batch_size=max_batch)
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            self.batch.serve = jax.device_put(self.batch.serve, ss)
+            dec_shard = {"out_shardings": (rep, ss)}
+            self._pack = jax.jit(_pack_slot, donate_argnums=(0,),
+                                 out_shardings=ss)
+        else:
+            self._pack = jax.jit(_pack_slot, donate_argnums=(0,))
         self._dec_sel = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=True),
-            donate_argnums=(1,))
+            donate_argnums=(1,), **dec_shard)
         self._dec_reuse = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=False),
-            donate_argnums=(1,))
-        self._pack = jax.jit(_pack_slot, donate_argnums=(0,))
-
-        self.batch = self._init_batch_state(max_batch)
+            donate_argnums=(1,), **dec_shard)
         self._tok = jnp.zeros((max_batch,), jnp.int32)   # next-token feed
         self._act_dev = jnp.zeros((max_batch,), bool)    # device active mask
         self._act_dirty = False
@@ -199,6 +260,12 @@ class Engine:
     # state construction
     # ------------------------------------------------------------------
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context for jitted calls: the shard_map co-placement
+        path discovers the mesh at trace time (runtime/hints.current_mesh),
+        so every prefill/decode/pack dispatch runs inside it."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
     def _init_batch_state(self, max_batch: int) -> BatchState:
         """All-free batched state. Cache contents are irrelevant until a
         slot is admitted (pack overwrites every leaf row), so zeros are
@@ -211,7 +278,7 @@ class Engine:
             probe = jax.ShapeDtypeStruct(
                 (max_batch, self.prompt_buckets[0]), jnp.int32)
         shapes = jax.eval_shape(
-            lambda p, b: M.prefill(cfg, p, b, capacity=self.capacity),
+            lambda p, b: M.prefill(cfg, p, b, capacity=self.cache_capacity),
             self.params, probe)[1]
         serve = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
         serve["length"] = jnp.zeros((max_batch,), jnp.int32)
@@ -241,10 +308,11 @@ class Engine:
 
     def _admit_one(self, req: Request, slot: int):
         prompt = jnp.asarray(np.asarray(req.prompt)[None])  # (1, S)
-        logits, small = self._prefill(self.params, prompt)
-        self.stats.prefills += 1
-        self.batch.serve = self._pack(self.batch.serve, small,
-                                      jnp.int32(slot))
+        with self._mesh_ctx():
+            logits, small = self._prefill(self.params, prompt)
+            self.stats.prefills += 1
+            self.batch.serve = self._pack(self.batch.serve, small,
+                                          jnp.int32(slot))
         first = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         self._tok = self._tok.at[slot].set(first)
         b = self.batch
@@ -275,11 +343,40 @@ class Engine:
         comp.finished_step = self.stats.decode_steps
         self.completions[comp.uid] = comp
 
+    def _pick_request(self) -> Request:
+        """Next request to admit. FIFO by default; ``balanced`` scores the
+        first ``admit_lookahead`` queued requests with the per-device
+        page-load imbalance they would create next to the live slots
+        (sched/balance.admission_score) and admits the best, FIFO on ties.
+        """
+        n_shards = self.balance_shards or 1
+        if (self.balance_shards is None and self.mesh is not None
+                and "model" in self.mesh.axis_names):
+            n_shards = int(self.mesh.shape["model"])
+        if (self.admission != "balanced" or n_shards <= 1
+                or len(self._queue) <= 1):
+            return self._queue.popleft()
+        from repro.sched import balance
+        live = [int(c) for c in self.batch.lengths[self.batch.active]]
+        best_i, best_s = 0, None
+        for i in range(min(self.admit_lookahead, len(self._queue))):
+            s = balance.admission_score(
+                live, len(self._queue[i].prompt), n_shards=n_shards,
+                page_size=self.cfg.h2eal.page_size)
+            if best_s is None or s < best_s - 1e-12:
+                best_i, best_s = i, s
+        if best_i == 0:
+            return self._queue.popleft()
+        self.stats.admission_reorders += 1
+        req = self._queue[best_i]
+        del self._queue[best_i]
+        return req
+
     def _admit(self):
         for slot in self.batch.free_slots():
             if not self._queue:
                 break
-            self._admit_one(self._queue.popleft(), slot)
+            self._admit_one(self._pick_request(), slot)
 
     # ------------------------------------------------------------------
     # decode loop
@@ -299,14 +396,16 @@ class Engine:
             self._act_dev = jnp.asarray(active)
             self._act_dirty = False
         act_dev = self._act_dev
-        if need.any():
-            logits, b.serve = self._dec_sel(
-                self.params, b.serve, self._tok, act_dev, jnp.asarray(need))
-            self.stats.select_steps += 1
-        else:
-            logits, b.serve = self._dec_reuse(
-                self.params, b.serve, self._tok, act_dev)
-            self.stats.reuse_steps += 1
+        with self._mesh_ctx():
+            if need.any():
+                logits, b.serve = self._dec_sel(
+                    self.params, b.serve, self._tok, act_dev,
+                    jnp.asarray(need))
+                self.stats.select_steps += 1
+            else:
+                logits, b.serve = self._dec_reuse(
+                    self.params, b.serve, self._tok, act_dev)
+                self.stats.reuse_steps += 1
         self._tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._trace.append(self._tok)
         self.stats.decode_steps += 1
