@@ -22,9 +22,17 @@ visible devices — the multi-device perf row. The no-recompile check
 applies there too. Force a multi-device CPU run with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--attn-impl pallas`` adds the ref-vs-pallas comparison row: the same
+workload is served a second time with the Pallas attention kernels
+(partial attention + fused combine under coplace_shmap; interpret mode
+off-TPU, so the CPU row is a correctness row, not a perf row — see
+EXPERIMENTS.md). It reports tok/s for both impls, whether the greedy
+token traces match (exact-tie caveat in EXPERIMENTS.md), and the
+pallas engine's own no-recompile check.
+
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py
      PYTHONPATH=src python benchmarks/serve_throughput.py \
-         --layout coplace_shmap
+         --layout coplace_shmap --attn-impl pallas
 """
 from __future__ import annotations
 
@@ -83,11 +91,12 @@ def make_lockstep_runner(cfg, params, *, capacity):
 
 
 def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
-               reps=1, layout=None, admission="fifo"):
+               reps=1, layout=None, admission="fifo", attn_impl="ref"):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
-                 prompt_buckets=buckets, layout=layout, admission=admission)
+                 prompt_buckets=buckets, layout=layout, admission=admission,
+                 impl=attn_impl)
     # warmup: touch every prompt bucket and both decode variants
     warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
                     max_new=cfg.h2eal.share_window + 2)
@@ -112,7 +121,9 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
             "wall_s": dt, "tokens_per_s": useful / dt,
             "tokens_per_step": useful / max(s.decode_steps, 1),
             "occupancy": s.occupancy, "recompiled_after_warmup": recompiled,
-            "jit_cache": sizes}
+            "jit_cache": sizes,
+            "tokens": {uid: list(c.tokens)
+                       for uid, c in completions.items()}}
 
 
 def dataclass_copy(x):
@@ -121,7 +132,7 @@ def dataclass_copy(x):
 
 
 def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
-        gen_max=40, seed=0, reps=3, layout=None):
+        gen_max=40, seed=0, reps=3, layout=None, attn_impl=None):
     from repro.configs import get_arch, reduced
     from repro.models import model as M
 
@@ -162,8 +173,26 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
         print(f"serve_throughput,recompiled_after_warmup,"
               f"{rag['recompiled_after_warmup']},jit_cache,"
               f"\"{rag['jit_cache']}\"")
-    return {"lockstep": lock, "ragged": rag, "speedup": ratio,
-            "step_reduction": step_ratio}
+
+    out = {"lockstep": lock, "ragged": rag, "speedup": ratio,
+           "step_reduction": step_ratio}
+    if attn_impl == "pallas":
+        # ref-vs-pallas comparison row: same requests, same admission
+        # trace, only the attention kernel impl differs (EXPERIMENTS.md).
+        pal = run_engine(cfg, params, reqs, max_batch=max_batch,
+                         capacity=capacity, buckets=buckets, reps=reps,
+                         layout=layout, admission=admission,
+                         attn_impl="pallas")
+        match = pal["tokens"] == rag["tokens"]
+        impl_ratio = pal["tokens_per_s"] / rag["tokens_per_s"]
+        if csv:
+            print(f"serve_throughput,attn_impl,pallas,tok_s,"
+                  f"{pal['tokens_per_s']:.2f},vs_ref,{impl_ratio:.2f},"
+                  f"tokens_match_ref,{match},recompiled_after_warmup,"
+                  f"{pal['recompiled_after_warmup']}")
+        out["pallas"] = pal
+        out["pallas_tokens_match_ref"] = match
+    return out
 
 
 if __name__ == "__main__":
@@ -178,7 +207,11 @@ if __name__ == "__main__":
                     default="default",
                     help="engine serve-cache layout (coplace_shmap = "
                          "shard_map co-placement + balanced admission)")
+    ap.add_argument("--attn-impl", choices=["ref", "pallas"], default="ref",
+                    help="pallas = add the ref-vs-pallas comparison row "
+                         "(Pallas kernels; interpret mode off-TPU)")
     a = ap.parse_args()
     run(requests=a.requests, max_batch=a.max_batch, gen_min=a.gen_min,
         gen_max=a.gen_max, seed=a.seed, reps=a.reps,
-        layout=None if a.layout == "default" else a.layout)
+        layout=None if a.layout == "default" else a.layout,
+        attn_impl=None if a.attn_impl == "ref" else a.attn_impl)

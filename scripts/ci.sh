@@ -1,6 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the exact command the roadmap pins. Run from the
 # repo root. FAST=1 skips the slow (multi-device subprocess) tests.
+#
+# The pallas-interpret parity tests are tier-1 ON PURPOSE and must stay
+# out of the `slow` marker, so CPU-only CI always exercises the Pallas
+# kernel path (docs/kernels.md): the kernel-vs-oracle sweeps incl.
+# paged_attention_partial / combine_partials in tests/test_kernels.py
+# and the engine attn-impl parity test in tests/test_serving.py all run
+# even under FAST=1. Only the 8-fake-device subprocess acceptance tests
+# carry the slow marker.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -365,6 +365,15 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
     is the per-slot share-window phase mask for the select variant. The
     per-slot vectors shard with the batch axis, so each device sees exactly
     the slots whose pages it co-owns.
+
+    ``spec.impl`` selects the per-shard partial-attention body
+    (kernels/ops.py): "ref" lowers the pure-jnp oracle and merges with a
+    (pmax, psum, psum) collective; "pallas" runs the Pallas
+    paged_attention_partial kernel per shard and merges with the fused
+    combine_partials epilogue after an all_gather of the (2+D)-floats-
+    per-head partials (the paper's cross-bank communication volume).
+    Both are exact up to float reassociation; per-slot validity masking
+    is identical (see docs/kernels.md).
     """
     import numpy as np
     from jax.sharding import PartitionSpec as P
@@ -382,6 +391,9 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
     dp = int(np.prod([mesh.shape[a] for a in ba]))
     bspec = ba if b % dp == 0 else None
     ragged = active is not None or jnp.asarray(length).ndim == 1
+    # static (trace-time) impl switch: selects the shard_map body's partial
+    # kernel AND its combine strategy, never a per-step branch
+    use_pallas = kops.resolve_impl(spec.impl) == "pallas"
 
     rep = P(bspec, None, None)
     cache5 = P(bspec, None, axis, None, None)
@@ -461,17 +473,26 @@ def _paged_decode_coplace(spec: AttnSpec, q_r, k_r, v_r,
         valid = paging.token_validity(
             loc_masked, pstart, ctx, sink=h2.sink, local=h2.local,
             page=p_sz, top_k=h2.top_k_pages)
-        from repro.kernels.ref import paged_attention_partial_ref
-        m, l, o = paged_attention_partial_ref(q, gk, gv, valid)
+        m, l, o = kops.paged_attention_partial(q, gk, gv, valid,
+                                               impl=spec.impl)
 
         # ---- cross-shard flash combine (the paper's cross-bank softmax) --
-        m_max = jax.lax.pmax(m, axis)
-        corr = jnp.where(jnp.isfinite(m),
-                         jnp.exp(m - jnp.where(jnp.isfinite(m_max), m_max,
-                                               0.0)), 0.0)
-        l_g = jax.lax.psum(l * corr, axis)
-        o_g = jax.lax.psum(o * corr[..., None].astype(o.dtype), axis)
-        out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+        if use_pallas:
+            # fused epilogue: ship each shard's (2+D) floats per head and
+            # run the max/rescale/sum/divide merge as one kernel
+            m_all = jax.lax.all_gather(m, axis)      # (nsh, B, HqR)
+            l_all = jax.lax.all_gather(l, axis)
+            o_all = jax.lax.all_gather(o, axis)      # (nsh, B, HqR, D)
+            out = kops.combine_partials(m_all, l_all, o_all,
+                                        impl=spec.impl).astype(q.dtype)
+        else:
+            m_max = jax.lax.pmax(m, axis)
+            corr = jnp.where(jnp.isfinite(m),
+                             jnp.exp(m - jnp.where(jnp.isfinite(m_max),
+                                                   m_max, 0.0)), 0.0)
+            l_g = jax.lax.psum(l * corr, axis)
+            o_g = jax.lax.psum(o * corr[..., None].astype(o.dtype), axis)
+            out = (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
         return out, kp, vp, tmin, tmax, imp, pstart, sel
 
     from repro.runtime.compat import shard_map as _shard_map

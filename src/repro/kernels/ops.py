@@ -4,9 +4,12 @@
   "ref"    — pure-jnp oracle (kernels/ref.py). Used for CPU tests and for
              the multi-pod dry-run (native HLO is what GSPMD partitions and
              what cost_analysis models).
-  "kernel" — Pallas TPU kernel (pl.pallas_call). On non-TPU backends the
+  "pallas" — Pallas TPU kernel (pl.pallas_call). On non-TPU backends the
              wrappers run the kernel in interpret mode so correctness is
-             testable everywhere.
+             testable everywhere. ("kernel" is accepted as a legacy alias.)
+
+Unknown ``impl`` strings raise ValueError (they used to fall through to
+the kernel path silently). See docs/kernels.md for the kernel catalog.
 """
 from __future__ import annotations
 
@@ -19,10 +22,24 @@ from repro.kernels import ref as _ref
 
 _INTERPRET = jax.default_backend() != "tpu"
 
+VALID_IMPLS = ("ref", "pallas")
+_ALIASES = {"kernel": "pallas"}
+
+
+def resolve_impl(impl: str) -> str:
+    """Canonicalize an ``impl`` string; raise ValueError if unknown."""
+    impl = _ALIASES.get(impl, impl)
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"unknown attention impl {impl!r}; valid impls: "
+            f"{', '.join(VALID_IMPLS)} (legacy alias: "
+            f"{', '.join(_ALIASES)})")
+    return impl
+
 
 def flash_attention(q, k, v, *, causal=True, window=0, sink=0, q_offset=0,
                     impl="ref"):
-    if impl == "ref":
+    if resolve_impl(impl) == "ref":
         return _ref.flash_attention_ref(
             q, k, v, causal=causal, window=window, sink=sink, q_offset=q_offset)
     from repro.kernels import flash_attention as fk
@@ -32,14 +49,39 @@ def flash_attention(q, k, v, *, causal=True, window=0, sink=0, q_offset=0,
 
 
 def paged_attention(q, k, v, valid, *, impl="ref"):
-    if impl == "ref":
+    if resolve_impl(impl) == "ref":
         return _ref.paged_attention_ref(q, k, v, valid)
     from repro.kernels import paged_attention as pk
     return pk.paged_attention(q, k, v, valid, interpret=_INTERPRET)
 
 
+def paged_attention_partial(q, k, v, valid, *, impl="ref"):
+    """Per-shard flash partials (m, l, o) — see
+    kernels.ref.paged_attention_partial_ref for the shape contract."""
+    if resolve_impl(impl) == "ref":
+        return _ref.paged_attention_partial_ref(q, k, v, valid)
+    from repro.kernels import paged_attention as pk
+    return pk.paged_attention_partial(q, k, v, valid, interpret=_INTERPRET)
+
+
+def combine_partials(m, l, o, *, axis=0, impl="ref"):
+    """Combine stacked flash partials into the normalized output.
+
+    m/l: (N, ..., Hq); o: (N, ..., Hq, D) stacked on ``axis``. The pallas
+    impl is the fused cross-bank epilogue and requires axis=0 and the
+    (N, B, Hq[, D]) layout the co-placement decode produces.
+    """
+    if resolve_impl(impl) == "ref":
+        return _ref.combine_partials_ref(m, l, o, axis=axis)
+    if axis != 0:
+        raise ValueError(f"pallas combine_partials requires axis=0, "
+                         f"got axis={axis}")
+    from repro.kernels import paged_attention as pk
+    return pk.combine_partials(m, l, o, interpret=_INTERPRET)
+
+
 def page_score(q, tau_min, tau_max, *, impl="ref"):
-    if impl == "ref":
+    if resolve_impl(impl) == "ref":
         return _ref.page_score_ref(q, tau_min, tau_max)
     from repro.kernels import page_score as sk
     return sk.page_score(q, tau_min, tau_max, interpret=_INTERPRET)

@@ -2,11 +2,23 @@
 
 The top-k page gather happens outside (a sharded XLA gather — on TPU a
 scalar-prefetch in-kernel gather buys nothing for this access pattern since
-whole pages are contiguous). The kernel streams the compacted KV through
+whole pages are contiguous). The kernels stream the compacted KV through
 VMEM in (BT, D) tiles with online softmax; q is the (G, D) GQA group,
 resident in VMEM for the whole program — this mirrors the paper's
 "sink+local in logic-die SRAM" co-design: the hot operand stays on-die
 while KV streams past it.
+
+Three entry points (see docs/kernels.md for the full catalog):
+
+  paged_attention          — normalized decode attention (single device).
+  paged_attention_partial  — the same online-softmax stream, but emitting
+                             the UNNORMALIZED flash partials (m, l, o) a
+                             bank/shard contributes under memory-compute
+                             co-placement (paper §IV-B). Contract matches
+                             kernels.ref.paged_attention_partial_ref.
+  combine_partials         — fused cross-bank epilogue: max/rescale/
+                             sum/divide over the shard axis in one kernel
+                             (the paper's cross-bank softmax merge).
 
 Layout: q (BH, G, D); kv (BH, T, D); valid (BH, T) -> out (BH, G, D),
 where BH = B * Hkv.
@@ -23,10 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            bt, seq_t):
+def _stream_tile(q_ref, k_ref, v_ref, valid_ref, m_ref, l_ref, acc_ref, *,
+                 bt, seq_t):
+    """One (BT, D) KV tile of the online-softmax stream: init on the first
+    tile, then masked rescale-and-accumulate into the (m, l, acc) VMEM
+    state. Shared by the normalized and partial kernels — only their
+    epilogues differ."""
     ti = pl.program_id(1)
-    nt = pl.num_programs(1)
 
     @pl.when(ti == 0)
     def _init():
@@ -55,7 +70,48 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
         p, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
-    @pl.when(ti == nt - 1)
+
+def _stream_call(kernel, q, k, v, valid, *, bt, interpret, out_specs,
+                 out_shape):
+    """Shared pallas_call setup for the KV-streaming decode kernels:
+    fold (B, Hkv) into the BH grid axis, tile T by ``bt``, and allocate
+    the (m, l, acc) online-softmax scratch."""
+    b, hq, d = q.shape
+    h_kv, t = k.shape[1], k.shape[2]
+    g = hq // h_kv
+    qg = q.reshape(b * h_kv, g, d)
+    kt = k.reshape(b * h_kv, t, d)
+    vt = v.reshape(b * h_kv, t, d)
+    vd = valid.reshape(b * h_kv, t).astype(jnp.int32)
+
+    bt_ = min(bt, t)
+    nt = pl.cdiv(t, bt_)
+    return pl.pallas_call(
+        functools.partial(kernel, bt=bt_, seq_t=t),
+        grid=(b * h_kv, nt),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
+            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
+            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
+            pl.BlockSpec((1, bt_), lambda bh, ti: (bh, ti)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, vd)
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bt, seq_t):
+    _stream_tile(q_ref, k_ref, v_ref, valid_ref, m_ref, l_ref, acc_ref,
+                 bt=bt, seq_t=seq_t)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
@@ -68,31 +124,100 @@ def paged_attention(q, k, v, valid, *, bt=512, interpret=False):
     Returns (B, Hq, D). Matches kernels.ref.paged_attention_ref.
     """
     b, hq, d = q.shape
-    h_kv, t = k.shape[1], k.shape[2]
+    h_kv = k.shape[1]
     g = hq // h_kv
-    qg = q.reshape(b * h_kv, g, d)
-    kt = k.reshape(b * h_kv, t, d)
-    vt = v.reshape(b * h_kv, t, d)
-    vd = valid.reshape(b * h_kv, t).astype(jnp.int32)
-
-    bt_ = min(bt, t)
-    nt = pl.cdiv(t, bt_)
-    out = pl.pallas_call(
-        functools.partial(_kernel, bt=bt_, seq_t=t),
-        grid=(b * h_kv, nt),
-        in_specs=[
-            pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
-            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
-            pl.BlockSpec((1, bt_, d), lambda bh, ti: (bh, ti, 0)),
-            pl.BlockSpec((1, bt_), lambda bh, ti: (bh, ti)),
-        ],
+    out = _stream_call(
+        _kernel, q, k, v, valid, bt=bt, interpret=interpret,
         out_specs=pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h_kv, g, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qg, kt, vt, vd)
+        out_shape=jax.ShapeDtypeStruct((b * h_kv, g, d), q.dtype))
     return out.reshape(b, hq, d)
+
+
+def _partial_kernel(q_ref, k_ref, v_ref, valid_ref, m_out, l_out, o_out,
+                    m_ref, l_ref, acc_ref, *, bt, seq_t):
+    """Same online-softmax stream as _kernel, but the epilogue emits the
+    raw (m, l, acc) accumulator state instead of normalizing — the shard's
+    contribution to the cross-bank combine."""
+    _stream_tile(q_ref, k_ref, v_ref, valid_ref, m_ref, l_ref, acc_ref,
+                 bt=bt, seq_t=seq_t)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _finish():
+        m_out[0] = m_ref[...][:, 0]
+        l_out[0] = l_ref[...][:, 0]
+        o_out[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def paged_attention_partial(q, k, v, valid, *, bt=512, interpret=False):
+    """Partial (unnormalized) decode attention for the cross-shard combine.
+
+    q: (B, Hq, D); k/v: (B, Hkv, T, D); valid: (B, Hkv, T) bool.
+    Returns (m, l, o): running max (B, Hq) f32, sumexp (B, Hq) f32,
+    numerator (B, Hq, D) f32 — matching
+    kernels.ref.paged_attention_partial_ref (all-invalid rows are the
+    identity element m=NEG_INF, l=0, o=0).
+    """
+    b, hq, d = q.shape
+    h_kv = k.shape[1]
+    g = hq // h_kv
+    m, l, o = _stream_call(
+        _partial_kernel, q, k, v, valid, bt=bt, interpret=interpret,
+        out_specs=[
+            pl.BlockSpec((1, g), lambda bh, ti: (bh, 0)),
+            pl.BlockSpec((1, g), lambda bh, ti: (bh, 0)),
+            pl.BlockSpec((1, g, d), lambda bh, ti: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h_kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b * h_kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b * h_kv, g, d), jnp.float32),
+        ])
+    return m.reshape(b, hq), l.reshape(b, hq), o.reshape(b, hq, d)
+
+
+def _combine_kernel(m_ref, l_ref, o_ref, out_ref, *, br, n_rows):
+    """Fused cross-bank epilogue: global max, rescale, sum, divide."""
+    ri = pl.program_id(0)
+    rows = ri * br + jax.lax.broadcasted_iota(jnp.int32, (1, br), 1)
+    inb = rows < n_rows                                      # (1, BR)
+    m = jnp.where(inb, m_ref[...], NEG_INF)                  # (N, BR)
+    l = jnp.where(inb, l_ref[...], 0.0)
+    o = jnp.where(inb[..., None], o_ref[...], 0.0)           # (N, BR, D)
+    m_g = jnp.max(m, axis=0)                                 # (BR,)
+    corr = jnp.exp(m - m_g[None, :])                         # (N, BR)
+    l_g = jnp.sum(l * corr, axis=0)
+    o_g = jnp.sum(o * corr[..., None], axis=0)               # (BR, D)
+    out_ref[...] = o_g / jnp.maximum(l_g, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def combine_partials(m, l, o, *, br=128, interpret=False):
+    """Fused flash-partial combine over the leading shard axis.
+
+    m/l: (N, B, Hq) f32; o: (N, B, Hq, D) f32 — the stacked per-bank
+    partials (e.g. from an all_gather). Returns the combined output
+    (B, Hq, D) f32, matching kernels.ref.combine_partials_ref(axis=0).
+    """
+    n, b_, hq = m.shape
+    d = o.shape[-1]
+    r = b_ * hq
+    mr = m.reshape(n, r)
+    lr = l.reshape(n, r)
+    orr = o.reshape(n, r, d)
+
+    br_ = min(br, r)
+    nr = pl.cdiv(r, br_)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, br=br_, n_rows=r),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((n, br_), lambda ri: (0, ri)),
+            pl.BlockSpec((n, br_), lambda ri: (0, ri)),
+            pl.BlockSpec((n, br_, d), lambda ri: (0, ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((br_, d), lambda ri: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(mr, lr, orr)
+    return out.reshape(b_, hq, d)

@@ -215,9 +215,19 @@ def paged_attention_partial_ref(q, k, v, valid):
     """Partial (unnormalized) attention for cross-shard combine.
 
     q: (B, Hq, D); k/v: (B, Hkv, T, D); valid: (B, Hkv, T).
-    Returns (m, l, o): running max (B,Hq), sumexp (B,Hq), numerator
-    (B,Hq,D) — combine across shards with combine_partials_ref / psum.
-    All-invalid shards return m=-inf, l=0, o=0 (identity element).
+
+    Shape contract (any kernel impl — e.g. the Pallas
+    paged_attention_partial — must match it):
+      m: (B, Hq) f32 — running max of valid logits, NEG_INF (-1e30, a
+         FINITE sentinel, never -inf) when a row has no valid token;
+      l: (B, Hq) f32 — sum of exp(logit - m) over valid tokens, 0 for
+         all-invalid rows;
+      o: (B, Hq, D) f32 — unnormalized numerator sum(exp(logit - m) * v),
+         0 for all-invalid rows.
+    (NEG_INF, 0, 0) is the identity element of merge_partials_ref, so
+    all-invalid shards drop out of the cross-shard combine exactly.
+    Combine across shards with combine_partials_ref or a
+    (pmax, psum, psum) collective merge.
     """
     b, hq, d = q.shape
     h_kv = k.shape[1]
@@ -285,15 +295,30 @@ def page_score_ref(q: Array, tau_min: Array, tau_max: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 
+def merge_partials_ref(m: Array, l: Array, o: Array, axis: int = 0):
+    """Merge flash partials into ONE partial (still unnormalized).
+
+    m/l: (N, ...); o: (N, ..., D) stacked on ``axis`` — each triple obeys
+    the paged_attention_partial_ref shape contract. Returns (m', l', o')
+    with the stack axis reduced. The merge is associative and commutative
+    (up to float reassociation), with identity (NEG_INF, 0, 0) — the
+    algebra that makes bank-count and shard-order irrelevant to the
+    co-placed decode (tested in tests/test_kernels.py).
+    """
+    m_g = jnp.max(m, axis=axis)
+    corr = jnp.exp(m - jnp.expand_dims(m_g, axis))
+    l_g = jnp.sum(l * corr, axis=axis)
+    o_g = jnp.sum(o * corr[..., None], axis=axis)
+    return m_g, l_g, o_g
+
+
 def combine_partials_ref(m: Array, l: Array, o: Array, axis: int = 0):
     """Combine flash-attention partials computed on different banks/shards.
 
     m: (N, ...) running max, l: (N, ...) sumexp, o: (N, ..., D) partial
     numerator (sum of exp(logit - m) * v). Returns combined output (..., D).
-    Exact: softmax over the union equals the weighted combine.
+    Exact: softmax over the union equals the weighted combine
+    (= merge_partials_ref followed by the l-normalization).
     """
-    m_g = jnp.max(m, axis=axis, keepdims=True)
-    corr = jnp.exp(m - m_g)
-    l_g = jnp.sum(l * corr, axis=axis)
-    o_g = jnp.sum(o * corr[..., None], axis=axis)
+    _, l_g, o_g = merge_partials_ref(m, l, o, axis=axis)
     return o_g / jnp.maximum(l_g, 1e-30)[..., None]

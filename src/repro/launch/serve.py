@@ -21,6 +21,10 @@ ragged batch on a 4x4 bank grid.
 memory-compute co-placement on a host-local mesh (pages sharded over the
 'model' axis; paper §IV-B); ``--admission balanced`` adds the
 balance-aware admission order (sched/balance.admission_score).
+``--attn-impl pallas`` swaps the attention bodies for the Pallas kernels
+(kernels/ops.py dispatch; interpret mode off-TPU) — including the
+partial-attention + fused-combine pair inside the coplace_shmap decode.
+The impl is fixed at engine construction, never switched per step.
 
 CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
@@ -49,7 +53,8 @@ from repro.runtime import serve as serve_rt
 
 
 def generate(cfg, params, prompts, *, gen: int, capacity: int,
-             mesh=None, layout=None, h2eal=True, greedy=True):
+             mesh=None, layout=None, h2eal=True, greedy=True,
+             attn_impl: str = "ref"):
     """Lockstep generation. prompts: (B, S) int32.
     Returns (tokens (B, gen), stats dict)."""
     import dataclasses
@@ -57,7 +62,8 @@ def generate(cfg, params, prompts, *, gen: int, capacity: int,
     if not h2eal:
         cfg = dataclasses.replace(
             cfg, h2eal=dataclasses.replace(cfg.h2eal, enabled=False))
-    scfg = serve_rt.ServeConfig(capacity=capacity, layout=layout)
+    scfg = serve_rt.ServeConfig(capacity=capacity, layout=layout,
+                                impl=attn_impl)
     b = prompts.shape[0]
     if mesh is not None:
         params_s = params
@@ -113,12 +119,15 @@ def make_ragged_requests(cfg, *, n: int, prompt_buckets, gen_min: int,
 
 def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
                prompt_buckets, report_balance: bool = False,
-               layout=None, admission: str = "fifo"):
+               layout=None, admission: str = "fifo",
+               attn_impl: str = "ref"):
     """Serve ``requests`` with the continuous-batching engine.
 
     ``layout="coplace_shmap"`` builds a host-local mesh with every device
-    on the 'model' axis and runs the sharded partial-attention decode.
-    Returns (completions, stats dict)."""
+    on the 'model' axis and runs the sharded partial-attention decode;
+    ``attn_impl="pallas"`` swaps the decode body for the Pallas kernels
+    (interpret mode off-TPU) — fixed at engine construction, never per
+    step. Returns (completions, stats dict)."""
     from repro.serving import Engine
 
     if admission == "balanced" and layout != "coplace_shmap":
@@ -127,7 +136,7 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
             "an effect when pages are sharded (--layout coplace_shmap)")
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=prompt_buckets, layout=layout,
-                 admission=admission)
+                 admission=admission, impl=attn_impl)
     completions = eng.run(requests)
     s = eng.stats
     stats = {
@@ -209,6 +218,11 @@ def main(argv=None):
                     default="fifo",
                     help="ragged admission order (balanced = per-device "
                          "page-load aware, sched/balance.py)")
+    ap.add_argument("--attn-impl", choices=["ref", "pallas"], default="ref",
+                    help="attention kernel impl (kernels/ops.py): ref = "
+                         "pure-jnp oracle, pallas = Pallas kernels "
+                         "(interpret mode off-TPU). Fixed at engine "
+                         "construction; see docs/serving.md")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -228,9 +242,11 @@ def main(argv=None):
         completions, stats = run_ragged(
             cfg, params, reqs, max_batch=args.max_batch, capacity=capacity,
             prompt_buckets=buckets, report_balance=args.report_balance,
-            layout=layout, admission=args.admission)
+            layout=layout, admission=args.admission,
+            attn_impl=args.attn_impl)
         print(f"[serve] arch={cfg.name} workload=ragged "
               f"layout={args.layout} admission={args.admission} "
+              f"attn_impl={args.attn_impl} "
               f"requests={len(completions)} steps={stats['decode_steps']} "
               f"occupancy={stats['occupancy']:.2f} "
               f"({stats['tokens_per_s']:.1f} tok/s)")
@@ -255,7 +271,7 @@ def main(argv=None):
     toks, stats = generate(
         cfg, params, prompts, gen=args.gen,
         capacity=args.prompt_len + args.gen + cfg.h2eal.page_size,
-        h2eal=args.h2eal == "on")
+        h2eal=args.h2eal == "on", attn_impl=args.attn_impl)
     print(f"[serve] arch={cfg.name} b={args.batch} "
           f"prefill={stats['prefill_s']:.2f}s "
           f"decode={stats['decode_s']:.2f}s "

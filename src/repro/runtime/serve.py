@@ -23,7 +23,9 @@ from repro.runtime import sharding as shardlib
 class ServeConfig:
     capacity: int                 # max context tokens the cache holds
     layout: str | None = None     # None = auto (see state_shardings)
-    impl: str = "ref"
+    impl: str = "ref"             # attention kernels: "ref" | "pallas"
+                                  # (kernels/ops.py; baked into the
+                                  # compiled steps, never a runtime switch)
 
 
 def make_prefill(cfg: ArchConfig, scfg: ServeConfig):

@@ -169,6 +169,13 @@ class Engine:
     max_batch   : number of slots (the compiled decode batch).
     capacity    : max context tokens any slot may reach (cache size).
     prompt_buckets : allowed prompt lengths; one prefill compile each.
+    impl        : attention kernel implementation, ``"ref"`` (pure-jnp
+                  oracle) or ``"pallas"`` (Pallas kernels; interpret mode
+                  off-TPU). Validated and BAKED INTO the compiled step
+                  functions here at construction — impl switching never
+                  happens per step, so the zero-recompile invariant is
+                  unaffected (docs/serving.md). Exposed as ``--attn-impl``
+                  by launch/serve.py and benchmarks/serve_throughput.py.
     layout      : serve-cache layout (None = default single-program path;
                   ``"coplace_shmap"`` = shard_map memory-compute
                   co-placement — pages sharded over the mesh 'model' axis,
@@ -191,8 +198,11 @@ class Engine:
                  mesh=None, admission: str = "fifo",
                  admit_lookahead: int = 4,
                  balance_shards: Optional[int] = None):
+        from repro.kernels.ops import resolve_impl
+
         self.cfg = cfg
         self.params = params
+        self.attn_impl = resolve_impl(impl)   # raises on unknown impls
         self.layout = layout
         if layout == "coplace_shmap" and mesh is None:
             from repro.launch.mesh import make_local_mesh
@@ -219,7 +229,7 @@ class Engine:
             f"room to decode within capacity {self.capacity}")
         self.share_window = max(cfg.h2eal.share_window, 1)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
-                                    layout=layout, impl=impl)
+                                    layout=layout, impl=self.attn_impl)
         self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
         self.batch = self._init_batch_state(max_batch)
         # Under coplace_shmap the batched state must live in ONE stable

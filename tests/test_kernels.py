@@ -1,13 +1,20 @@
-"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+These parity tests are tier-1 (never behind the ``slow`` marker) so
+CPU-only CI always exercises the Pallas kernel path — see scripts/ci.sh.
+Tolerance bands are documented in EXPERIMENTS.md §Serving experiments.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.page_score import page_score
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (combine_partials, paged_attention,
+                                           paged_attention_partial)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -117,6 +124,140 @@ def test_page_score_is_upper_bound():
     per_key = np.einsum("bhgd,bhpkd->bhgpk", qg, np.asarray(keys))
     per_key_groupsum = per_key.sum(axis=2)  # (b, h, p, k)
     assert np.all(np.asarray(scores)[..., None] >= per_key_groupsum - 1e-4)
+
+
+PARTIAL_CASES = [
+    (2, 8, 2, 640, 64),
+    (1, 4, 4, 500, 128),   # non-block-multiple T, MHA
+    (2, 2, 1, 100, 32),    # MQA
+    (1, 16, 2, 1024, 64),  # large GQA group
+]
+
+
+@pytest.mark.parametrize("case", PARTIAL_CASES)
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+def test_paged_attention_partial_matches_ref(case, density):
+    """Pallas partial decode attention (interpret) vs the pure-jnp oracle
+    over ragged validity masks — the (m, l, o) shape contract of
+    kernels.ref.paged_attention_partial_ref, tolerance band in
+    EXPERIMENTS.md §Serving experiments. density=0.0 is the all-invalid
+    identity (m=NEG_INF, l=0, o=0) every retired slot/empty shard hits."""
+    b, hq, hkv, t, d = case
+    ks = jax.random.split(jax.random.fold_in(KEY, int(density * 10)), 4)
+    q = _rand(ks[0], (b, hq, d), jnp.float32)
+    k = _rand(ks[1], (b, hkv, t, d), jnp.float32)
+    v = _rand(ks[2], (b, hkv, t, d), jnp.float32)
+    valid = jax.random.bernoulli(ks[3], density, (b, hkv, t))
+    m, l, o = paged_attention_partial(q, k, v, valid, interpret=True)
+    me, le, oe = ref.paged_attention_partial_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(me),
+                               atol=2e-6, rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(le),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oe),
+                               atol=2e-5, rtol=2e-5)
+    if density == 0.0:
+        assert np.all(np.asarray(m) == ref.NEG_INF)
+        assert np.all(np.asarray(l) == 0.0)
+        assert np.all(np.asarray(o) == 0.0)
+
+
+def test_combine_partials_kernel_matches_ref():
+    """Fused combine epilogue (interpret) vs combine_partials_ref,
+    including all-invalid shards in the stack."""
+    n, b, hq, d = 8, 3, 4, 32
+    ks = jax.random.split(KEY, 3)
+    m = jax.random.normal(ks[0], (n, b, hq)) * 3
+    l = jnp.abs(jax.random.normal(ks[1], (n, b, hq))) + 0.1
+    o = jax.random.normal(ks[2], (n, b, hq, d))
+    # two shards contribute nothing (the co-placement identity element)
+    m = m.at[1].set(ref.NEG_INF).at[4].set(ref.NEG_INF)
+    l = l.at[1].set(0.0).at[4].set(0.0)
+    o = o.at[1].set(0.0).at[4].set(0.0)
+    got = combine_partials(m, l, o, interpret=True)
+    exp = ref.combine_partials_ref(m, l, o, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=2e-6, rtol=2e-6)
+    # all shards empty -> zeros, no NaN
+    z = combine_partials(jnp.full_like(m, ref.NEG_INF), jnp.zeros_like(l),
+                         jnp.zeros_like(o), interpret=True)
+    assert np.all(np.asarray(z) == 0.0)
+
+
+def _partials_fixture(n, seed):
+    """n per-shard partials over disjoint token ranges of one softmax."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    b, h, t, d = 2, 3, 16, 8
+    logits = jax.random.normal(ks[0], (n, b, h, t)) * 3
+    v = jax.random.normal(ks[1], (n, b, h, t, d))
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("nbht,nbhtd->nbhd", p, v)
+    # shard 0 all-invalid when n allows: identity must drop out exactly
+    if n >= 3:
+        m = m.at[0].set(ref.NEG_INF)
+        l = l.at[0].set(0.0)
+        o = o.at[0].set(0.0)
+    return m, l, o
+
+
+@settings(max_examples=10)
+@given(n=st.integers(2, 6), seed=st.integers(0, 1 << 16))
+def test_combine_partials_associative_and_permutation_invariant(n, seed):
+    """The flash-partial merge is an associative, commutative monoid with
+    identity (NEG_INF, 0, 0): combining shard partials in any grouping or
+    order yields the same softmax output — the algebra that makes the
+    co-placed decode independent of bank count and shard order."""
+    m, l, o = _partials_fixture(n, seed)
+    flat = ref.combine_partials_ref(m, l, o, axis=0)
+
+    # shard-permutation invariance (commutativity)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), n)
+    permuted = ref.combine_partials_ref(m[perm], l[perm], o[perm], axis=0)
+    np.testing.assert_allclose(np.asarray(permuted), np.asarray(flat),
+                               atol=1e-5, rtol=1e-5)
+
+    # associativity: pre-merge any prefix into ONE partial, then combine
+    for k in range(1, n):
+        mm, lm, om = ref.merge_partials_ref(m[:k], l[:k], o[:k], axis=0)
+        m2 = jnp.concatenate([mm[None], m[k:]], axis=0)
+        l2 = jnp.concatenate([lm[None], l[k:]], axis=0)
+        o2 = jnp.concatenate([om[None], o[k:]], axis=0)
+        grouped = ref.combine_partials_ref(m2, l2, o2, axis=0)
+        np.testing.assert_allclose(np.asarray(grouped), np.asarray(flat),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_ops_impl_validation():
+    """kernels.ops raises on unknown impl strings (it used to fall through
+    to the kernel path silently) and accepts the legacy "kernel" alias."""
+    from repro.kernels import ops
+
+    b, hq, hkv, t, d = 1, 2, 1, 16, 32
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (b, hq, d), jnp.float32)
+    k = _rand(ks[1], (b, hkv, t, d), jnp.float32)
+    v = _rand(ks[2], (b, hkv, t, d), jnp.float32)
+    valid = jnp.ones((b, hkv, t), bool)
+    tau_min = _rand(ks[3], (b, hkv, t, d), jnp.float32)   # (B,Hkv,C,D)
+    tau_max = tau_min + 1.0
+    for fn in (lambda i: ops.paged_attention(q, k, v, valid, impl=i),
+               lambda i: ops.paged_attention_partial(q, k, v, valid, impl=i),
+               lambda i: ops.flash_attention(
+                   q[:, None], k.transpose(0, 2, 1, 3),
+                   v.transpose(0, 2, 1, 3), impl=i),
+               lambda i: ops.page_score(q, tau_min, tau_max, impl=i)):
+        with pytest.raises(ValueError, match="valid impls"):
+            fn("cuda")
+    with pytest.raises(ValueError, match="valid impls"):
+        ops.combine_partials(jnp.zeros((2, 1, 2)), jnp.zeros((2, 1, 2)),
+                             jnp.zeros((2, 1, 2, 4)), impl="triton")
+    # legacy alias still dispatches to the pallas path
+    out = ops.paged_attention(q, k, v, valid, impl="kernel")
+    exp = ops.paged_attention(q, k, v, valid, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_combine_partials_exact():
