@@ -15,12 +15,19 @@ tok/s is directly comparable. The engine also must not recompile after
 warmup: jit cache sizes are captured post-warmup and asserted stable
 through the measured phase.
 
-``--layout coplace_shmap`` additionally runs the engine under shard_map
-memory-compute co-placement (pages sharded over the mesh 'model' axis,
-paper §IV-B) with balance-aware admission, on a host-local mesh over all
-visible devices — the multi-device perf row. The no-recompile check
-applies there too. Force a multi-device CPU run with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+``--layout`` takes a comma-separated list of core/layouts registry
+entries and produces one ragged row per layout (page-sharding layouts
+get balance-aware admission automatically): ``coplace_shmap`` runs the
+engine under shard_map memory-compute co-placement (pages sharded over
+the mesh 'model' axis, paper §IV-B), ``interleave`` under GSPMD
+within-page token striping (paper Fig 7b) — the multi-device rows. The
+no-recompile check applies to every row. Force a multi-device CPU run
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--json PATH`` additionally writes the machine-readable row list
+(tok/s per layout x impl, occupancy, recompile flags) — the
+BENCH_serve.json artifact; scripts/ci.sh smokes this invocation so the
+perf trajectory is captured on every full CI run.
 
 ``--attn-impl pallas`` adds the ref-vs-pallas comparison row: the same
 workload is served a second time with the Pallas attention kernels
@@ -131,10 +138,43 @@ def dataclass_copy(x):
     return dataclasses.replace(x)
 
 
+def _row(mode, layout, impl, r, *, lock=None, extra=None):
+    """One machine-readable benchmark row (the --json payload unit)."""
+    row = {"mode": mode, "layout": layout, "impl": impl,
+           "tokens_per_s": r["tokens_per_s"],
+           "tokens_per_step": r["tokens_per_step"],
+           "decode_steps": r["decode_steps"],
+           "useful_tokens": r["useful_tokens"],
+           "wall_s": r["wall_s"]}
+    if "occupancy" in r:
+        row["occupancy"] = r["occupancy"]
+    if "recompiled_after_warmup" in r:
+        row["recompiled_after_warmup"] = r["recompiled_after_warmup"]
+        row["jit_cache"] = r["jit_cache"]
+    if lock is not None:
+        row["speedup_vs_lockstep"] = r["tokens_per_s"] / lock["tokens_per_s"]
+    if extra:
+        row.update(extra)
+    return row
+
+
 def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
-        gen_max=40, seed=0, reps=3, layout=None, attn_impl=None):
+        gen_max=40, seed=0, reps=3, layout=None, layouts=None,
+        attn_impl=None, json_path=None):
+    """Lockstep vs ragged at equal token budget, per layout (x impl).
+
+    ``layouts`` is an iterable of core/layouts registry names (default:
+    just the default layout; the deprecated single ``layout=`` alias is
+    folded in). ``json_path`` additionally writes the machine-readable
+    row list (tok/s per layout x impl, occupancy, recompile flags) —
+    the BENCH_serve.json artifact scripts/ci.sh smokes.
+    """
     from repro.configs import get_arch, reduced
+    from repro.core import layouts as layoutlib
     from repro.models import model as M
+
+    names = [layoutlib.resolve_layout(n)
+             for n in (layouts if layouts else [layout])]
 
     cfg = reduced(get_arch("smollm-360m"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -151,51 +191,89 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
                 for _ in range(max(reps, 1))), key=lambda r: r["wall_s"])
     lock["tokens_per_step"] = (lock["useful_tokens"]
                                / max(lock["decode_steps"], 1))
-    admission = "balanced" if layout == "coplace_shmap" else "fifo"
-    rag = run_engine(cfg, params, reqs, max_batch=max_batch,
-                     capacity=capacity, buckets=buckets, reps=reps,
-                     layout=layout, admission=admission)
-
-    tag = layout or "default"
-    ratio = rag["tokens_per_s"] / lock["tokens_per_s"]
-    step_ratio = rag["tokens_per_step"] / lock["tokens_per_step"]
+    rows = [_row("lockstep", "default", "ref", lock)]
+    out = {"lockstep": lock, "layouts": {}}
     if csv:
-        print(f"serve_throughput,layout,{tag},devices,{len(jax.devices())}")
-        print(f"serve_throughput,lockstep_tok_s,{lock['tokens_per_s']:.2f},"
-              f"steps,{lock['decode_steps']},tok_per_step,"
+        print(f"serve_throughput,devices,{len(jax.devices())},"
+              f"lockstep_tok_s,{lock['tokens_per_s']:.2f},steps,"
+              f"{lock['decode_steps']},tok_per_step,"
               f"{lock['tokens_per_step']:.2f}")
-        print(f"serve_throughput,ragged_tok_s,{rag['tokens_per_s']:.2f},"
-              f"steps,{rag['decode_steps']},tok_per_step,"
-              f"{rag['tokens_per_step']:.2f},occupancy,"
-              f"{rag['occupancy']:.2f}")
-        print(f"serve_throughput,wall_speedup,{ratio:.2f},"
-              f"per_step_throughput_gain,{step_ratio:.2f}")
-        print(f"serve_throughput,recompiled_after_warmup,"
-              f"{rag['recompiled_after_warmup']},jit_cache,"
-              f"\"{rag['jit_cache']}\"")
 
-    out = {"lockstep": lock, "ragged": rag, "speedup": ratio,
-           "step_reduction": step_ratio}
-    if attn_impl == "pallas":
-        # ref-vs-pallas comparison row: same requests, same admission
-        # trace, only the attention kernel impl differs (EXPERIMENTS.md).
-        pal = run_engine(cfg, params, reqs, max_batch=max_batch,
+    for name in names:
+        admission = ("balanced" if layoutlib.get_layout(name).shards_pages
+                     else "fifo")
+        rag = run_engine(cfg, params, reqs, max_batch=max_batch,
                          capacity=capacity, buckets=buckets, reps=reps,
-                         layout=layout, admission=admission,
-                         attn_impl="pallas")
-        match = pal["tokens"] == rag["tokens"]
-        impl_ratio = pal["tokens_per_s"] / rag["tokens_per_s"]
+                         layout=name, admission=admission)
+        ratio = rag["tokens_per_s"] / lock["tokens_per_s"]
+        step_ratio = rag["tokens_per_step"] / lock["tokens_per_step"]
+        rows.append(_row("ragged", name, "ref", rag, lock=lock))
+        out["layouts"][name] = {"ragged": rag, "speedup": ratio,
+                                "step_reduction": step_ratio}
         if csv:
-            print(f"serve_throughput,attn_impl,pallas,tok_s,"
-                  f"{pal['tokens_per_s']:.2f},vs_ref,{impl_ratio:.2f},"
-                  f"tokens_match_ref,{match},recompiled_after_warmup,"
-                  f"{pal['recompiled_after_warmup']}")
-        out["pallas"] = pal
-        out["pallas_tokens_match_ref"] = match
+            print(f"serve_throughput,layout,{name}")
+            print(f"serve_throughput,ragged_tok_s,"
+                  f"{rag['tokens_per_s']:.2f},steps,"
+                  f"{rag['decode_steps']},tok_per_step,"
+                  f"{rag['tokens_per_step']:.2f},occupancy,"
+                  f"{rag['occupancy']:.2f}")
+            print(f"serve_throughput,wall_speedup,{ratio:.2f},"
+                  f"per_step_throughput_gain,{step_ratio:.2f}")
+            print(f"serve_throughput,recompiled_after_warmup,"
+                  f"{rag['recompiled_after_warmup']},jit_cache,"
+                  f"\"{rag['jit_cache']}\"")
+        if attn_impl == "pallas":
+            # ref-vs-pallas comparison row: same requests, same admission
+            # trace, only the attention kernel impl differs
+            # (EXPERIMENTS.md).
+            pal = run_engine(cfg, params, reqs, max_batch=max_batch,
+                             capacity=capacity, buckets=buckets, reps=reps,
+                             layout=name, admission=admission,
+                             attn_impl="pallas")
+            match = pal["tokens"] == rag["tokens"]
+            impl_ratio = pal["tokens_per_s"] / rag["tokens_per_s"]
+            rows.append(_row("ragged", name, "pallas", pal, lock=lock,
+                             extra={"tokens_match_ref": match}))
+            if csv:
+                print(f"serve_throughput,attn_impl,pallas,tok_s,"
+                      f"{pal['tokens_per_s']:.2f},vs_ref,{impl_ratio:.2f},"
+                      f"tokens_match_ref,{match},recompiled_after_warmup,"
+                      f"{pal['recompiled_after_warmup']}")
+            out["layouts"][name]["pallas"] = pal
+            out["layouts"][name]["pallas_tokens_match_ref"] = match
+
+    # back-compat single-layout view (deprecated alias, one release)
+    first = out["layouts"][names[0]]
+    out.update({"ragged": first["ragged"], "speedup": first["speedup"],
+                "step_reduction": first["step_reduction"]})
+    if "pallas" in first:
+        out["pallas"] = first["pallas"]
+        out["pallas_tokens_match_ref"] = first["pallas_tokens_match_ref"]
+
+    if json_path:
+        import json
+
+        payload = {
+            "benchmark": "serve_throughput",
+            "devices": len(jax.devices()),
+            "config": {"requests": requests, "max_batch": max_batch,
+                       "gen_min": gen_min, "gen_max": gen_max,
+                       "seed": seed, "reps": reps,
+                       "prompt_buckets": buckets, "capacity": capacity},
+            "rows": [{k: v for k, v in r.items() if k != "tokens"}
+                     for r in rows],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        if csv:
+            print(f"serve_throughput,json,{json_path},rows,{len(rows)}")
     return out
 
 
 if __name__ == "__main__":
+    from repro.core.layouts import available_layouts
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -203,15 +281,21 @@ if __name__ == "__main__":
     ap.add_argument("--gen-max", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--layout", choices=["default", "coplace_shmap"],
-                    default="default",
-                    help="engine serve-cache layout (coplace_shmap = "
-                         "shard_map co-placement + balanced admission)")
+    ap.add_argument("--layout", default="default",
+                    help="comma-separated engine serve-cache layouts "
+                         f"(registry entries: {', '.join(available_layouts())}; "
+                         "page-sharding layouts get balanced admission)")
     ap.add_argument("--attn-impl", choices=["ref", "pallas"], default="ref",
                     help="pallas = add the ref-vs-pallas comparison row "
-                         "(Pallas kernels; interpret mode off-TPU)")
+                         "per layout (Pallas kernels; interpret mode "
+                         "off-TPU)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable row list (tok/s per "
+                         "layout x impl, occupancy, recompile flags) to "
+                         "PATH, e.g. BENCH_serve.json")
     a = ap.parse_args()
     run(requests=a.requests, max_batch=a.max_batch, gen_min=a.gen_min,
         gen_max=a.gen_max, seed=a.seed, reps=a.reps,
-        layout=None if a.layout == "default" else a.layout,
-        attn_impl=None if a.attn_impl == "ref" else a.attn_impl)
+        layouts=[s.strip() for s in a.layout.split(",") if s.strip()],
+        attn_impl=None if a.attn_impl == "ref" else a.attn_impl,
+        json_path=a.json)

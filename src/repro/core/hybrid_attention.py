@@ -13,6 +13,15 @@ Decode:   retrieval heads -> page-score -> top-k -> paged attention over
           [sink pages | selected pages | local pages];
           streaming heads -> attention over the sink+local ring buffer.
 Selection is recomputed every ``share_window`` steps (``do_select``).
+
+This module holds the attention BODIES. Layout dispatch lives one level
+up in core/layouts.py (the AttentionLayout registry + the DecodeInputs
+pytree): ``decode_attention`` backs the ``default`` layout (and, via
+GSPMD repartitioning of the same program, ``head``/``coplace``/
+``interleave``); ``decode_attention_coplace`` backs ``coplace_shmap``.
+Calling these functions directly with their long positional signatures
+still works but is a deprecated path kept for one release — new code
+should go through ``layouts.dispatch_decode``.
 """
 from __future__ import annotations
 

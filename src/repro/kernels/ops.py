@@ -13,6 +13,7 @@ the kernel path silently). See docs/kernels.md for the kernel catalog.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -24,11 +25,26 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 VALID_IMPLS = ("ref", "pallas")
 _ALIASES = {"kernel": "pallas"}
+_warned_aliases: set[str] = set()
 
 
 def resolve_impl(impl: str) -> str:
-    """Canonicalize an ``impl`` string; raise ValueError if unknown."""
-    impl = _ALIASES.get(impl, impl)
+    """Canonicalize an ``impl`` string; raise ValueError if unknown.
+
+    Legacy aliases (``"kernel"``) resolve to their canonical impl but
+    emit a DeprecationWarning once per process — they will be removed
+    after one release.
+    """
+    if impl in _ALIASES:
+        canonical = _ALIASES[impl]
+        if impl not in _warned_aliases:
+            _warned_aliases.add(impl)
+            warnings.warn(
+                f"impl={impl!r} is a deprecated alias for "
+                f"{canonical!r} and will be removed; pass "
+                f"{canonical!r} instead", DeprecationWarning,
+                stacklevel=2)
+        impl = canonical
     if impl not in VALID_IMPLS:
         raise ValueError(
             f"unknown attention impl {impl!r}; valid impls: "

@@ -17,10 +17,13 @@ occupancy, per-function jit compile counts, and (with
 ``--report-balance``) the sched/balance imbalance score of the final
 ragged batch on a 4x4 bank grid.
 
-``--layout coplace_shmap`` runs the ragged workload under shard_map
+``--layout`` accepts any core/layouts registry entry:
+``coplace_shmap`` runs the ragged workload under shard_map
 memory-compute co-placement on a host-local mesh (pages sharded over the
-'model' axis; paper §IV-B); ``--admission balanced`` adds the
-balance-aware admission order (sched/balance.admission_score).
+'model' axis; paper §IV-B), ``interleave`` under GSPMD within-page token
+striping (paper Fig 7b); ``--admission balanced`` adds the
+balance-aware admission order (sched/balance.admission_score) for any
+page-sharding layout.
 ``--attn-impl pallas`` swaps the attention bodies for the Pallas kernels
 (kernels/ops.py dispatch; interpret mode off-TPU) — including the
 partial-attention + fused-combine pair inside the coplace_shmap decode.
@@ -123,17 +126,22 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
                attn_impl: str = "ref"):
     """Serve ``requests`` with the continuous-batching engine.
 
-    ``layout="coplace_shmap"`` builds a host-local mesh with every device
-    on the 'model' axis and runs the sharded partial-attention decode;
+    ``layout`` is any core/layouts registry entry (e.g. "coplace_shmap"
+    builds a host-local mesh with every device on the 'model' axis and
+    runs the sharded partial-attention decode; "interleave" stripes
+    within-page tokens over the 'data' axis under GSPMD);
     ``attn_impl="pallas"`` swaps the decode body for the Pallas kernels
     (interpret mode off-TPU) — fixed at engine construction, never per
     step. Returns (completions, stats dict)."""
+    from repro.core import layouts as layoutlib
     from repro.serving import Engine
 
-    if admission == "balanced" and layout != "coplace_shmap":
+    if admission == "balanced" and \
+            not layoutlib.get_layout(layout).shards_pages:
         raise ValueError(
             "--admission balanced scores per-device page load and only has "
-            "an effect when pages are sharded (--layout coplace_shmap)")
+            "an effect for layouts that shard pages (e.g. --layout "
+            "coplace_shmap or interleave)")
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=prompt_buckets, layout=layout,
                  admission=admission, impl=attn_impl)
@@ -209,11 +217,15 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=0,
                     help="cache capacity in tokens (0 = auto)")
     ap.add_argument("--report-balance", action="store_true")
-    ap.add_argument("--layout", choices=["auto", "coplace_shmap"],
+    from repro.core.layouts import available_layouts
+    ap.add_argument("--layout",
+                    choices=["auto"] + list(available_layouts()),
                     default="auto",
-                    help="serve-cache layout (ragged workload): "
-                         "coplace_shmap = shard_map co-placement on a "
-                         "host-local mesh")
+                    help="serve-cache layout (ragged workload), a "
+                         "core/layouts registry entry; auto = default. "
+                         "coplace_shmap = shard_map co-placement, "
+                         "interleave = GSPMD within-page token striping, "
+                         "both on a host-local mesh")
     ap.add_argument("--admission", choices=["fifo", "balanced"],
                     default="fifo",
                     help="ragged admission order (balanced = per-device "

@@ -32,6 +32,7 @@ from repro.configs.base import (
 from repro.core import cache as cachelib
 from repro.core import gating as gatinglib
 from repro.core import hybrid_attention as hattn
+from repro.core import layouts as layoutlib
 from repro.models import moe as moelib
 from repro.models import ssm as ssmlib
 from repro.models import xlstm as xlstmlib
@@ -275,14 +276,11 @@ def block_prefill(cfg: ArchConfig, pos: int, p, plan, x, rope, *,
         perm = plan["perm"]
         o = hattn.prefill_attention(spec, q, k, v, perm)
         if spec.h2.enabled and spec.window == 0:
-            nsh = 1
-            if layout == "coplace_shmap":
-                mesh = hints.current_mesh()
-                if mesh is not None and "model" in mesh.axis_names:
-                    nsh = int(mesh.shape["model"])
-            paged, stream = hattn.init_decode_state(
-                spec, k, v, s_len, capacity, perm, interleave_shards=nsh)
-            cache = {"paged": paged, "stream": stream}
+            # the layout entry decides the physical page order (e.g.
+            # coplace_shmap's round-robin striping sized to the ambient
+            # mesh); see core/layouts.py
+            cache = layoutlib.get_layout(layout).prefill(
+                spec, k, v, s_len, capacity, perm)
         else:  # full-attention baseline / plain window layer
             ctx_cap = capacity
             full = cachelib.make_full_cache(
@@ -334,18 +332,13 @@ def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
             o, full = hattn.full_decode_attention(
                 spec, q, k, v, cache["full"], length, active=active)
             cache = {"full": full}
-        elif layout == "coplace_shmap":
-            o, paged, stream = hattn.decode_attention_coplace(
-                spec, q, k, v, cache["paged"], cache["stream"], length,
-                do_select=do_select, perm=plan["perm"], active=active,
-                need_select=need_select)
-            cache = {"paged": paged, "stream": stream}
         else:
-            o, paged, stream = hattn.decode_attention(
-                spec, q, k, v, cache["paged"], cache["stream"], length,
-                do_select=do_select, perm=plan["perm"], active=active,
+            inputs = layoutlib.DecodeInputs(
+                q=q, k_new=k, v_new=v, lengths=length, active=active,
                 need_select=need_select)
-            cache = {"paged": paged, "stream": stream}
+            o, cache = layoutlib.dispatch_decode(
+                layout, spec, cache, inputs, do_select=do_select,
+                perm=plan["perm"])
         b = o.shape[0]
         x = x + dense(o.reshape(b, -1), p["wo"])
     elif mixer == MIXER_MAMBA2:

@@ -22,24 +22,39 @@ from repro.runtime import sharding as shardlib
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     capacity: int                 # max context tokens the cache holds
-    layout: str | None = None     # None = auto (see state_shardings)
+    layout: str | None = None     # core/layouts registry name; None is a
+                                  # deprecated alias for "default" in the
+                                  # step builders (state_shardings keeps
+                                  # its batch-size auto rule for None)
     impl: str = "ref"             # attention kernels: "ref" | "pallas"
                                   # (kernels/ops.py; baked into the
                                   # compiled steps, never a runtime switch)
 
 
+def _layout(scfg: ServeConfig) -> str:
+    """Canonical layout name for the model step functions; raises on
+    unknown names with the registered list (core/layouts.py)."""
+    from repro.core import layouts as layoutlib
+
+    return layoutlib.resolve_layout(scfg.layout)
+
+
 def make_prefill(cfg: ArchConfig, scfg: ServeConfig):
+    layout = _layout(scfg)
+
     def prefill(params, batch):
         return M.prefill(cfg, params, batch, capacity=scfg.capacity,
-                         impl=scfg.impl, layout=scfg.layout)
+                         impl=scfg.impl, layout=layout)
     return prefill
 
 
 def make_decode_step(cfg: ArchConfig, scfg: ServeConfig, *, do_select: bool):
+    layout = _layout(scfg)
+
     def decode(params, state, token):
         return M.decode_step(cfg, params, state, token,
                              do_select=do_select, impl=scfg.impl,
-                             layout=scfg.layout)
+                             layout=layout)
     return decode
 
 
@@ -52,15 +67,16 @@ def make_ragged_decode_step(cfg: ArchConfig, scfg: ServeConfig, *,
     share-window phase mask — so each slot refreshes its page selection on
     its own cadence while sharing one compiled program.
     """
+    layout = _layout(scfg)
     if do_select:
         def decode(params, state, token, active, need_select):
             return M.decode_step(cfg, params, state, token, do_select=True,
-                                 impl=scfg.impl, layout=scfg.layout,
+                                 impl=scfg.impl, layout=layout,
                                  active=active, need_select=need_select)
     else:
         def decode(params, state, token, active):
             return M.decode_step(cfg, params, state, token, do_select=False,
-                                 impl=scfg.impl, layout=scfg.layout,
+                                 impl=scfg.impl, layout=layout,
                                  active=active)
     return decode
 

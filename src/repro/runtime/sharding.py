@@ -21,6 +21,11 @@ Serve-cache layouts (the paper's §IV-B mapped to mesh axes):
                across the data axis, so any top-k selection lands uniformly
                on all devices (paper Fig 7b). Default for long_500k where
                batch cannot feed the mesh.
+
+The layouts themselves are registry entries (core/layouts.py,
+AttentionLayout): each entry owns its paged-cache leaf placement via
+``cache_axes``; this module turns those axis tuples into PartitionSpecs
+and handles everything layout-independent.
 """
 from __future__ import annotations
 
@@ -153,15 +158,24 @@ def batch_sharding(mesh: Mesh, batch_size: int):
 
 # ---------------------------------------------------------------------------
 # Serve-cache layouts
+#
+# The per-layout placement of the paged-cache leaves lives with the
+# layout entries in core/layouts.py (AttentionLayout.cache_axes); this
+# module keeps the generic machinery (batch axes, divisibility
+# filtering, scan-stacked leaves) and the layout-independent leaves
+# (stream ring, SSM/xLSTM state). The name constants are re-exported
+# for backward compatibility.
 # ---------------------------------------------------------------------------
 
-LAYOUT_HEAD = "head"
-LAYOUT_COPLACE = "coplace"
-LAYOUT_INTERLEAVE = "interleave"
-LAYOUT_COPLACE_SHMAP = "coplace_shmap"  # shard_map partial-attention path
+from repro.core.layouts import (  # noqa: E402  (re-export)
+    LAYOUT_COPLACE,
+    LAYOUT_COPLACE_SHMAP,
+    LAYOUT_HEAD,
+    LAYOUT_INTERLEAVE,
+)
 
 
-def _cache_leaf_spec(path: str, shape, mesh: Mesh, layout: str,
+def _cache_leaf_spec(path: str, shape, mesh: Mesh, layout_obj,
                      batch_ok: bool, stacked: bool):
     inner = shape[1:] if stacked else shape
     nd = len(inner)
@@ -169,6 +183,7 @@ def _cache_leaf_spec(path: str, shape, mesh: Mesh, layout: str,
 
     def build(*axes):
         axes = (list(axes) + [None] * nd)[:nd]
+        axes = [b_ax if a == "batch" else a for a in axes]
         axes = [a if _div(inner[i], mesh, a) else None
                 for i, a in enumerate(axes)]
         if stacked:
@@ -177,20 +192,11 @@ def _cache_leaf_spec(path: str, shape, mesh: Mesh, layout: str,
 
     h_ax = "model"
     if "k_pages" in path or "v_pages" in path:      # (B, Hr, C, P, D)
-        if layout == LAYOUT_HEAD:
-            return build(b_ax, h_ax, None, None, None)
-        if layout in (LAYOUT_COPLACE, LAYOUT_COPLACE_SHMAP) or batch_ok:
-            # batch already consumes 'data'; pages over 'model'
-            return build(b_ax, None, "model", None, None)
-        return build(None, None, "model", "data", None)  # interleave
+        return build(*layout_obj.cache_axes("pages", batch_ok=batch_ok))
     if "tau_min" in path or "tau_max" in path:      # (B, Hr, C, D)
-        if layout == LAYOUT_HEAD:
-            return build(b_ax, h_ax, None, None)
-        return build(b_ax, None, "model", None)
+        return build(*layout_obj.cache_axes("tau", batch_ok=batch_ok))
     if "importance" in path or "page_start" in path:  # (B, Hr, C)
-        if layout == LAYOUT_HEAD:
-            return build(b_ax, h_ax, None)
-        return build(b_ax, None, "model")
+        return build(*layout_obj.cache_axes("meta", batch_ok=batch_ok))
     if "sel_idx" in path:                            # (B, Hr, K)
         return build(b_ax, None, None)
     # dataclass attributes render as ".k" in keystr (dicts as "['k']")
@@ -214,16 +220,22 @@ def state_shardings(cfg, mesh: Mesh, state, *, layout: str | None = None,
                     batch_size: int | None = None):
     """Pytree of NamedSharding for a ServeState.
 
-    layout defaults to: interleave when the batch can't fill (pod x data),
-    head otherwise — i.e. H²EAL co-placement turns on exactly when plain
-    data parallelism starves (the paper's motivation).
+    ``layout`` is resolved through the core/layouts registry (unknown
+    names raise with the registered list). ``layout=None`` keeps the
+    pre-registry auto rule: interleave when the batch can't fill
+    (pod x data), head otherwise — i.e. H²EAL co-placement turns on
+    exactly when plain data parallelism starves (the paper's
+    motivation).
     """
+    from repro.core import layouts as layoutlib
+
     ax = batch_axes(mesh)
     dp = int(np.prod([mesh.shape[a] for a in ax]))
     if layout is None:
         layout = (LAYOUT_INTERLEAVE
                   if (batch_size is not None and batch_size < dp)
                   else LAYOUT_HEAD)
+    lay = layoutlib.get_layout(layout)
     batch_ok = batch_size is None or batch_size % dp == 0
 
     flat = jax.tree_util.tree_flatten_with_path(state)
@@ -234,7 +246,7 @@ def state_shardings(cfg, mesh: Mesh, state, *, layout: str | None = None,
             out.append(NamedSharding(mesh, P()))
             continue
         stacked = "['blocks']" in pstr
-        spec = _cache_leaf_spec(pstr, leaf.shape, mesh, layout,
+        spec = _cache_leaf_spec(pstr, leaf.shape, mesh, lay,
                                 batch_ok, stacked)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(

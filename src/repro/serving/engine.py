@@ -38,15 +38,20 @@ variants + pack), the steady state runs with zero recompiles regardless
 of how requests arrive — verified via jit cache-miss counts in
 benchmarks/serve_throughput.py.
 
-The engine also runs under the ``coplace_shmap`` layout (paper §IV-B:
-pages sharded over the mesh 'model' axis, each device computing partial
-attention for exactly the pages it stores, merged with a cross-device
-log-sum-exp combine — see core/hybrid_attention.py). The per-slot
-length/active/need_select vectors thread straight through the shard_map
-body, and ``admission="balanced"`` adds the paper's §IV-C load balancing
-at the batch dimension: queued requests are admitted in the order that
-keeps per-device page load flattest (sched/balance.py). See
-docs/serving.md.
+The engine runs under ANY layout registered in core/layouts.py
+(AttentionLayout registry): the layout's ``plan()`` resolves and
+validates the mesh, rounds the cache capacity, and decides whether the
+batched state lives in a sharded placement — all at construction time,
+so every layout gets the same early validation. ``coplace_shmap``
+(paper §IV-B: pages sharded over the mesh 'model' axis, each device
+computing partial attention for exactly the pages it stores, merged
+with a cross-device log-sum-exp combine — core/hybrid_attention.py)
+and ``interleave`` (paper Fig 7b: GSPMD within-page token striping) are
+the sharded entries; the per-slot length/active/need_select vectors
+thread straight through either decode body, and
+``admission="balanced"`` adds the paper's §IV-C load balancing at the
+batch dimension: queued requests are admitted in the order that keeps
+per-device page load flattest (sched/balance.py). See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -176,15 +181,19 @@ class Engine:
                   happens per step, so the zero-recompile invariant is
                   unaffected (docs/serving.md). Exposed as ``--attn-impl``
                   by launch/serve.py and benchmarks/serve_throughput.py.
-    layout      : serve-cache layout (None = default single-program path;
-                  ``"coplace_shmap"`` = shard_map memory-compute
-                  co-placement — pages sharded over the mesh 'model' axis,
-                  each device computing partial attention for the pages it
-                  stores).
-    mesh        : mesh for ``coplace_shmap`` (defaults to a host-local mesh
-                  with all devices on the 'model' axis). Every jitted call
-                  runs inside this mesh's context so the shard_map path can
-                  see it.
+    layout      : serve-cache layout name, resolved through the
+                  core/layouts registry (unknown names raise listing the
+                  registered layouts). ``None`` is a deprecated alias for
+                  ``"default"``. The layout's ``plan()`` runs here at
+                  construction: it resolves/validates the mesh, rounds
+                  the cache capacity to the layout's quantum, and decides
+                  whether the batched state is device_put into a sharded
+                  placement — so a layout whose mesh requirements aren't
+                  met fails NOW, not at the first decode step.
+    mesh        : mesh override for sharded layouts (each layout builds
+                  its own host-local default). Every jitted call runs
+                  inside this mesh's context so shard_map / GSPMD paths
+                  can see it.
     admission   : ``"fifo"`` (default) or ``"balanced"`` — balanced looks
                   at the first ``admit_lookahead`` queued requests and
                   admits the one that keeps per-device page load most
@@ -198,30 +207,29 @@ class Engine:
                  mesh=None, admission: str = "fifo",
                  admit_lookahead: int = 4,
                  balance_shards: Optional[int] = None):
+        from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
 
         self.cfg = cfg
         self.params = params
         self.attn_impl = resolve_impl(impl)   # raises on unknown impls
-        self.layout = layout
-        if layout == "coplace_shmap" and mesh is None:
-            from repro.launch.mesh import make_local_mesh
-            mesh = make_local_mesh(model=len(jax.devices()))
-        self.mesh = mesh
+        self.layout = layoutlib.resolve_layout(layout)  # raises on unknown
+        # construction-time layout planning: mesh resolution/validation,
+        # capacity rounding, sharded-state requirements — every layout
+        # (not just coplace_shmap) gets the same early validation
+        self.plan = layoutlib.get_layout(self.layout).plan(cfg, mesh)
+        self.mesh = self.plan.mesh
         assert admission in ("fifo", "balanced"), admission
         self.admission = admission
         self.admit_lookahead = max(int(admit_lookahead), 1)
         # shard count the balanced admission scores against; defaults to
-        # the mesh 'model' size (1 → FIFO). Override for an engine whose
+        # the layout plan's (1 → FIFO). Override for an engine whose
         # pages are sharded externally (or in tests).
         self.balance_shards = balance_shards
         self.capacity = int(capacity)
         # the sharded cache needs a whole number of pages per device; the
         # retirement boundary stays at the caller's `capacity`
-        self.cache_capacity = self.capacity
-        if layout == "coplace_shmap":
-            quantum = cfg.h2eal.page_size * int(self.mesh.shape["model"])
-            self.cache_capacity = -(-self.capacity // quantum) * quantum
+        self.cache_capacity = self.plan.round_capacity(self.capacity)
         self.prompt_buckets = tuple(sorted(int(b) for b in prompt_buckets))
         assert self.prompt_buckets, "need at least one prompt bucket"
         assert self.prompt_buckets[-1] < self.capacity, (
@@ -229,21 +237,20 @@ class Engine:
             f"room to decode within capacity {self.capacity}")
         self.share_window = max(cfg.h2eal.share_window, 1)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
-                                    layout=layout, impl=self.attn_impl)
+                                    layout=self.layout, impl=self.attn_impl)
         self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
         self.batch = self._init_batch_state(max_batch)
-        # Under coplace_shmap the batched state must live in ONE stable
-        # sharded layout from step 0: otherwise the first decode reshards
-        # it (unsharded zeros in, shard_map layout out) and pack/decode
-        # each compile a second entry AFTER warmup. Pinning out_shardings
-        # keeps every steady-state call on a single compiled program.
+        # Under a sharded layout the batched state must live in ONE stable
+        # sharded placement from step 0: otherwise the first decode
+        # reshards it (unsharded zeros in, sharded layout out) and
+        # pack/decode each compile a second entry AFTER warmup. Pinning
+        # out_shardings keeps every steady-state call on a single
+        # compiled program.
         dec_shard = {}
-        if self.mesh is not None and layout == "coplace_shmap":
+        if self.plan.shard_state:
             from jax.sharding import NamedSharding, PartitionSpec
-            from repro.runtime import sharding as shardlib
-            ss = shardlib.state_shardings(cfg, self.mesh, self.batch.serve,
-                                          layout=layout,
-                                          batch_size=max_batch)
+            ss = self.plan.state_shardings(cfg, self.batch.serve,
+                                           batch_size=max_batch)
             rep = NamedSharding(self.mesh, PartitionSpec())
             self.batch.serve = jax.device_put(self.batch.serve, ss)
             dec_shard = {"out_shardings": (rep, ss)}
@@ -359,10 +366,7 @@ class Engine:
         page-load imbalance they would create next to the live slots
         (sched/balance.admission_score) and admits the best, FIFO on ties.
         """
-        n_shards = self.balance_shards or 1
-        if (self.balance_shards is None and self.mesh is not None
-                and "model" in self.mesh.axis_names):
-            n_shards = int(self.mesh.shape["model"])
+        n_shards = self.balance_shards or self.plan.balance_shards
         if (self.admission != "balanced" or n_shards <= 1
                 or len(self._queue) <= 1):
             return self._queue.popleft()

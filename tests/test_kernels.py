@@ -260,6 +260,30 @@ def test_ops_impl_validation():
                                atol=2e-5, rtol=2e-5)
 
 
+def test_kernel_alias_deprecation_warns_once():
+    """The legacy impl="kernel" alias (previously silently accepted)
+    emits a DeprecationWarning exactly once per process and still
+    resolves to "pallas"."""
+    import warnings
+
+    from repro.kernels import ops
+
+    ops._warned_aliases.discard("kernel")   # reset the once-per-process latch
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ops.resolve_impl("kernel") == "pallas"
+        assert ops.resolve_impl("kernel") == "pallas"   # second call: silent
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "deprecated alias" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    # canonical names never warn
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ops.resolve_impl("pallas") == "pallas"
+        assert ops.resolve_impl("ref") == "ref"
+    assert not rec
+
+
 def test_combine_partials_exact():
     """Cross-bank flash combine == softmax over the union (co-placement)."""
     ks = jax.random.split(KEY, 3)

@@ -1,0 +1,198 @@
+"""AttentionLayout registry: resolution, planning, and the layout
+conformance sweep.
+
+The sweep is the point of the registry: ONE parameterized test iterates
+every registered layout and asserts the engine-level contract — token
+exactness vs the ``default`` layout, slot-churn invariance, and the
+zero-recompile invariant — so any future ``register_layout()`` entry
+gets its conformance tests for free.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import layouts as layoutlib
+from repro.models import model as M
+from repro.serving import Engine, Request
+from tests.test_serving import CAP, _mixed_workload
+
+LAYOUTS = layoutlib.available_layouts()
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_arch("smollm-360m"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Registry + DecodeInputs
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolution():
+    assert set(LAYOUTS) >= {"default", "head", "coplace", "interleave",
+                            "coplace_shmap"}
+    # deprecated aliases (one release): None and "auto" mean default
+    assert layoutlib.resolve_layout(None) == "default"
+    assert layoutlib.resolve_layout("auto") == "default"
+    for name in LAYOUTS:
+        assert layoutlib.get_layout(name).name == name
+    with pytest.raises(ValueError, match="registered layouts"):
+        layoutlib.get_layout("bogus")
+
+
+def test_register_custom_layout():
+    """A new entry is one register_layout() call away (and is listed)."""
+
+    class Custom(layoutlib.DefaultLayout):
+        name = "custom_test_layout"
+
+    try:
+        layoutlib.register_layout(Custom())
+        assert "custom_test_layout" in layoutlib.available_layouts()
+        assert isinstance(layoutlib.get_layout("custom_test_layout"), Custom)
+    finally:
+        del layoutlib._REGISTRY["custom_test_layout"]
+    with pytest.raises(ValueError, match="registered layouts"):
+        layoutlib.get_layout("custom_test_layout")
+
+
+def test_decode_inputs_pytree():
+    di = layoutlib.DecodeInputs(
+        q=jnp.ones((2, 4, 8)), k_new=jnp.ones((2, 2, 8)),
+        v_new=jnp.ones((2, 2, 8)), lengths=jnp.int32(5))
+    assert not di.is_ragged
+    leaves, treedef = jax.tree_util.tree_flatten(di)
+    assert len(leaves) == 4  # None masks are empty subtrees
+    di2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert di2.active is None and di2.lengths.shape == ()
+    ragged = layoutlib.DecodeInputs(
+        q=di.q, k_new=di.k_new, v_new=di.v_new,
+        lengths=jnp.array([3, 5], jnp.int32),
+        active=jnp.array([True, False]))
+    assert ragged.is_ragged
+
+
+def test_base_layout_ragged_unsupported():
+    class NoRagged(layoutlib.AttentionLayout):
+        name = "lockstep_only"
+
+    with pytest.raises(NotImplementedError, match="ragged"):
+        NoRagged().ragged_decode(None, {}, None, do_select=False)
+
+
+# ---------------------------------------------------------------------------
+# Construction-time planning (the Engine mesh-validation bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_mesh_and_capacity(model):
+    cfg, _ = model
+    p = cfg.h2eal.page_size
+    plan_d = layoutlib.get_layout("default").plan(cfg)
+    assert plan_d.mesh is None and not plan_d.shard_state
+    assert plan_d.round_capacity(61) == 61
+
+    plan_i = layoutlib.get_layout("interleave").plan(cfg)
+    assert plan_i.shard_state
+    assert {"data", "model"} <= set(plan_i.mesh.axis_names)
+    nsh = int(plan_i.mesh.shape["model"])
+    assert plan_i.capacity_quantum == p * nsh
+    assert plan_i.round_capacity(p * nsh + 1) == 2 * p * nsh
+    assert plan_i.balance_shards == nsh
+
+    plan_c = layoutlib.get_layout("coplace_shmap").plan(cfg)
+    assert plan_c.shard_state and plan_c.capacity_quantum == p * int(
+        plan_c.mesh.shape["model"])
+    # head parallelism distributes heads, not pages: no rounding, FIFO
+    plan_h = layoutlib.get_layout("head").plan(cfg)
+    assert plan_h.capacity_quantum == 1 and plan_h.balance_shards == 1
+
+
+def test_plan_validates_mesh_axes(model):
+    """A layout whose mesh requirements aren't met fails at plan/Engine
+    construction time, not at the first decode step."""
+    from repro.runtime.compat import make_mesh
+
+    cfg, params = model
+    n = len(jax.devices())
+    no_data = make_mesh((n,), ("model",))
+    with pytest.raises(ValueError, match="'data'"):
+        layoutlib.get_layout("interleave").plan(cfg, no_data)
+    no_model = make_mesh((n,), ("data",))
+    with pytest.raises(ValueError, match="'model'"):
+        layoutlib.get_layout("coplace_shmap").plan(cfg, no_model)
+    with pytest.raises(ValueError, match="'data'"):
+        Engine(cfg, params, max_batch=1, capacity=CAP, prompt_buckets=[16],
+               layout="interleave", mesh=no_data)
+
+
+def test_engine_resolves_layout_through_registry(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="registered layouts"):
+        Engine(cfg, params, max_batch=1, capacity=CAP, prompt_buckets=[16],
+               layout="bogus")
+    eng = Engine(cfg, params, max_batch=1, capacity=CAP, prompt_buckets=[16],
+                 layout=None)   # deprecated alias
+    assert eng.layout == "default" and eng.plan.layout == "default"
+
+
+def test_state_shardings_resolve_through_registry(model):
+    from repro.runtime import sharding as shardlib
+    from repro.runtime.compat import make_mesh
+
+    cfg, _ = model
+    mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+    with pytest.raises(ValueError, match="registered layouts"):
+        shardlib.state_shardings(cfg, mesh, {"x": jnp.zeros((4, 4))},
+                                 layout="bogus")
+
+
+# ---------------------------------------------------------------------------
+# The conformance sweep: every registered layout, for free
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def default_trace(model):
+    """Reference tokens from the default layout: one mixed (churny)
+    workload + the first request served solo."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24])
+    reqs = _mixed_workload(cfg, n=3)
+    mixed = {u: c.tokens for u, c in eng.run(reqs).items()}
+    eng.reset_metrics()
+    solo = eng.run([Request(uid=100, prompt=reqs[0].prompt,
+                            max_new=reqs[0].max_new)])
+    return reqs, mixed, solo[100].tokens
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance(model, default_trace, name):
+    """Engine contract per registered layout: (1) token-exact vs the
+    default layout for the same admission trace, (2) slot-churn
+    invariance (a request's tokens are identical served solo or amid
+    churn), (3) no recompiles across differently-shaped workloads.
+    Token-exactness holds off argmax ties (EXPERIMENTS.md §Serving
+    experiments)."""
+    cfg, params = model
+    reqs, mixed_ref, solo_ref = default_trace
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name)
+    assert eng.layout == name
+    mixed = eng.run(_mixed_workload(cfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    sizes0 = eng.jit_cache_sizes()
+    eng.reset_metrics()
+    solo = eng.run([Request(uid=100, prompt=reqs[0].prompt,
+                            max_new=reqs[0].max_new)])
+    assert solo[100].tokens == solo_ref, name          # vs default
+    assert solo[100].tokens == mixed_ref[0], name      # churn invariance
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
