@@ -24,10 +24,29 @@ within-page token striping (paper Fig 7b) — the multi-device rows. The
 no-recompile check applies to every row. Force a multi-device CPU run
 with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--prefill-chunk N`` adds, per layout, a chunked-prefill engine row
+(admission interleaved with decode, ≤ N prompt tokens per engine step
+through the layout protocol) with a ``tokens_match_packed`` check
+against the prefill-then-pack row — same admission trace, token-exact
+off argmax ties.
+
+``--arrival poisson`` runs the bursty-arrival LATENCY harness instead
+of the batch drain: seeded Poisson arrivals with periodic max-bucket
+long prompts, engine driven step-by-step with a device sync so the
+per-step timestamps are honest. Reports p50/p99 time-to-first-token and
+inter-token latency for packed vs chunked admission, plus
+``decode_tokens_during_long_prefill`` — the step-exact no-head-of-line
+metric (tokens other slots emitted while a long prompt was being
+admitted: always 0 for the atomic prefill-then-pack, > 0 for chunked).
+On CPU the wall-clock percentiles are dispatch-noise bound (correctness
+rows, like the interpret-mode pallas rows); the step-exact metric is
+the portable signal. See EXPERIMENTS.md §Serving experiments.
+
 ``--json PATH`` additionally writes the machine-readable row list
-(tok/s per layout x impl, occupancy, recompile flags) — the
-BENCH_serve.json artifact; scripts/ci.sh smokes this invocation so the
-perf trajectory is captured on every full CI run.
+(tok/s per layout x impl x admission mode, occupancy, recompile flags,
+latency percentiles) — the BENCH_serve.json artifact; scripts/ci.sh
+smokes this invocation so the perf trajectory is captured on every full
+CI run.
 
 ``--attn-impl pallas`` adds the ref-vs-pallas comparison row: the same
 workload is served a second time with the Pallas attention kernels
@@ -98,12 +117,13 @@ def make_lockstep_runner(cfg, params, *, capacity):
 
 
 def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
-               reps=1, layout=None, admission="fifo", attn_impl="ref"):
+               reps=1, layout="default", admission="fifo", attn_impl="ref",
+               prefill_chunk=None):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=buckets, layout=layout, admission=admission,
-                 impl=attn_impl)
+                 impl=attn_impl, prefill_chunk=prefill_chunk)
     # warmup: touch every prompt bucket and both decode variants
     warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
                     max_new=cfg.h2eal.share_window + 2)
@@ -138,6 +158,123 @@ def dataclass_copy(x):
     return dataclasses.replace(x)
 
 
+def run_latency(cfg, params, *, requests, max_batch, capacity, buckets,
+                gen_min, gen_max, seed, layout="default", admission="fifo",
+                prefill_chunk=None, arrival_rate=0.5, long_every=3,
+                long_len=None):
+    """Bursty-arrival latency run: p50/p99 time-to-first-token and
+    inter-token latency under Poisson arrivals with periodic max-bucket
+    long prompts (the head-of-line blocking scenario chunked prefill
+    targets).
+
+    Requests arrive by a seeded Poisson process (``arrival_rate``
+    requests per engine step, exponential inter-arrivals); every
+    ``long_every``-th request is a max-bucket prompt, the rest draw from
+    the smaller buckets. The engine is driven step-by-step with a device
+    sync per step so the per-step timestamps are honest — this is a
+    latency harness, not a throughput number (the sync serializes
+    dispatch). TTFT = first-token wall time minus submit wall time; ITL
+    = wall time between a request's consecutive tokens. With
+    prefill-then-pack admission the whole prompt prefills inside one
+    loop iteration, so a long arrival stalls every concurrent decode
+    (the ITL tail); chunked prefill bounds the stall by one chunk.
+    """
+    from repro.launch.serve import make_ragged_requests
+    from repro.serving import Engine, Request
+
+    # the long-prompt bucket must dwarf a decode step for the
+    # head-of-line stall to be visible above dispatch noise
+    long_len = long_len or 8 * max(buckets)
+    capacity = max(capacity, long_len + gen_max + cfg.h2eal.page_size)
+    all_buckets = sorted(set(buckets) | {long_len})
+    eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
+                 prompt_buckets=all_buckets, layout=layout,
+                 admission=admission, prefill_chunk=prefill_chunk)
+    warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
+                    max_new=cfg.h2eal.share_window + 2)
+            for i, b in enumerate(all_buckets)]
+    eng.run(warm)
+    warm_sizes = eng.jit_cache_sizes()
+    eng.reset_metrics()
+
+    rng = np.random.default_rng(seed)
+    reqs = make_ragged_requests(cfg, n=requests, prompt_buckets=buckets,
+                                gen_min=gen_min, gen_max=gen_max, seed=seed)
+    for r in reqs[long_every - 1::long_every]:   # bursty long prompts
+        r.prompt = rng.integers(0, cfg.vocab_size,
+                                size=(long_len,)).astype(np.int32)
+    arrive = np.cumsum(rng.exponential(1.0 / arrival_rate, size=requests))
+    pending = list(zip(arrive, reqs))
+
+    t0 = time.time()
+    times = [t0]                 # times[k] = wall clock after engine step k
+    submit_t = {}
+    while pending or eng.busy():
+        step_no = eng.stats.engine_steps
+        while pending and pending[0][0] <= step_no:
+            _, r = pending.pop(0)
+            submit_t[r.uid] = time.time()
+            eng.submit(r)
+        if not eng.busy():
+            if not pending:
+                break
+            _, r = pending.pop(0)    # idle: fast-forward the arrival clock
+            submit_t[r.uid] = time.time()
+            eng.submit(r)
+        if eng.poll():
+            eng.sync()
+            times.append(time.time())  # times[k] = wall after engine step k
+    eng.finalize()
+
+    ttft, itl = [], []
+    for comp in eng.completions.values():
+        if comp.uid not in submit_t:
+            continue
+        t_first = times[min(comp.first_token_step, len(times) - 1)]
+        ttft.append(t_first - submit_t[comp.uid])
+        prev = t_first
+        for es in eng.token_engine_steps(comp):
+            t_tok = times[min(es, len(times) - 1)]
+            itl.append(t_tok - prev)
+            prev = t_tok
+    # the structural no-head-of-line claim, at step granularity (exact on
+    # any host, unlike the wall-clock percentiles which are dispatch-noise
+    # bound on a CPU toy config): tokens OTHER slots emitted between a
+    # long request's admission and its first token. Prefill-then-pack is
+    # an atomic admission — always 0; chunked admission keeps decoding.
+    during = []
+    longs = [c for c in eng.completions.values()
+             if c.uid in submit_t and c.prompt_len == long_len]
+    for lc in longs:
+        n = sum(
+            1
+            for c in eng.completions.values()
+            if c.uid != lc.uid and c.uid in submit_t
+            for es in eng.token_engine_steps(c)
+            if lc.admitted_engine_step < es < lc.first_token_step)
+        during.append(n)
+    pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+    s = eng.stats
+    recompiled = any(a != b for a, b in zip(eng.jit_cache_sizes().values(),
+                                            warm_sizes.values()))
+    return {
+        "useful_tokens": s.tokens_out, "decode_steps": s.decode_steps,
+        "engine_steps": s.engine_steps, "prefill_chunks": s.prefill_chunks,
+        "admissions": s.admissions,
+        "wall_s": times[-1] - t0,
+        "tokens_per_s": s.tokens_out / max(times[-1] - t0, 1e-9),
+        "tokens_per_step": s.tokens_out / max(s.decode_steps, 1),
+        "occupancy": s.occupancy,
+        "recompiled_after_warmup": recompiled,
+        "jit_cache": eng.jit_cache_sizes(),
+        "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+        "itl_p50_s": pct(itl, 50), "itl_p99_s": pct(itl, 99),
+        "long_len": long_len,
+        "decode_tokens_during_long_prefill":
+            float(np.mean(during)) if during else 0.0,
+    }
+
+
 def _row(mode, layout, impl, r, *, lock=None, extra=None):
     """One machine-readable benchmark row (the --json payload unit)."""
     row = {"mode": mode, "layout": layout, "impl": impl,
@@ -159,15 +296,22 @@ def _row(mode, layout, impl, r, *, lock=None, extra=None):
 
 
 def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
-        gen_max=40, seed=0, reps=3, layout=None, layouts=None,
-        attn_impl=None, json_path=None):
+        gen_max=40, seed=0, reps=3, layout="default", layouts=None,
+        attn_impl=None, json_path=None, prefill_chunk=None,
+        arrival="batch", arrival_rate=0.5):
     """Lockstep vs ragged at equal token budget, per layout (x impl).
 
     ``layouts`` is an iterable of core/layouts registry names (default:
     just the default layout; the deprecated single ``layout=`` alias is
-    folded in). ``json_path`` additionally writes the machine-readable
-    row list (tok/s per layout x impl, occupancy, recompile flags) —
-    the BENCH_serve.json artifact scripts/ci.sh smokes.
+    folded in). ``prefill_chunk=N`` adds, per layout, a chunked-prefill
+    engine row (admission interleaved with decode, N tokens/step) next
+    to the prefill-then-pack row, with a ``tokens_match_packed`` check.
+    ``arrival="poisson"`` additionally runs the bursty-arrival LATENCY
+    harness (``run_latency``) per layout — packed vs chunked p50/p99
+    TTFT and inter-token latency rows. ``json_path`` writes the
+    machine-readable row list (tok/s per layout x impl x admission mode,
+    occupancy, recompile flags, latency percentiles) — the
+    BENCH_serve.json artifact scripts/ci.sh smokes.
     """
     from repro.configs import get_arch, reduced
     from repro.core import layouts as layoutlib
@@ -222,6 +366,56 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
             print(f"serve_throughput,recompiled_after_warmup,"
                   f"{rag['recompiled_after_warmup']},jit_cache,"
                   f"\"{rag['jit_cache']}\"")
+        if prefill_chunk:
+            # chunked-prefill row: same requests/admission, the prompt KV
+            # streams into the sharded slots chunk-by-chunk instead of
+            # prefill-then-pack; tokens must match the packed row (off
+            # argmax ties, EXPERIMENTS.md)
+            chk = run_engine(cfg, params, reqs, max_batch=max_batch,
+                             capacity=capacity, buckets=buckets, reps=reps,
+                             layout=name, admission=admission,
+                             prefill_chunk=prefill_chunk)
+            match = chk["tokens"] == rag["tokens"]
+            rows.append(_row("ragged", name, "ref", chk, lock=lock,
+                             extra={"prefill_chunk": prefill_chunk,
+                                    "tokens_match_packed": match}))
+            out["layouts"][name]["chunked"] = chk
+            out["layouts"][name]["chunked_tokens_match_packed"] = match
+            if csv:
+                print(f"serve_throughput,prefill_chunk,{prefill_chunk},"
+                      f"tok_s,{chk['tokens_per_s']:.2f},"
+                      f"tokens_match_packed,{match},"
+                      f"recompiled_after_warmup,"
+                      f"{chk['recompiled_after_warmup']}")
+        if arrival == "poisson":
+            for label, pc in (("packed", None), ("chunked", prefill_chunk)):
+                if label == "chunked" and not prefill_chunk:
+                    continue
+                lat = run_latency(
+                    cfg, params, requests=requests, max_batch=max_batch,
+                    capacity=capacity, buckets=buckets, gen_min=gen_min,
+                    gen_max=gen_max, seed=seed, layout=name,
+                    admission=admission, prefill_chunk=pc,
+                    arrival_rate=arrival_rate)
+                rows.append(_row("poisson", name, "ref", lat, extra={
+                    "prefill_chunk": pc or 0, "admission_mode": label,
+                    "arrival_rate": arrival_rate,
+                    "long_len": lat["long_len"],
+                    "ttft_p50_s": lat["ttft_p50_s"],
+                    "ttft_p99_s": lat["ttft_p99_s"],
+                    "itl_p50_s": lat["itl_p50_s"],
+                    "itl_p99_s": lat["itl_p99_s"],
+                    "decode_tokens_during_long_prefill":
+                        lat["decode_tokens_during_long_prefill"]}))
+                out["layouts"][name][f"poisson_{label}"] = lat
+                if csv:
+                    print(f"serve_throughput,poisson,{label},layout,{name},"
+                          f"ttft_p50_ms,{lat['ttft_p50_s']*1e3:.1f},"
+                          f"ttft_p99_ms,{lat['ttft_p99_s']*1e3:.1f},"
+                          f"itl_p50_ms,{lat['itl_p50_s']*1e3:.1f},"
+                          f"itl_p99_ms,{lat['itl_p99_s']*1e3:.1f},"
+                          f"decode_tok_during_long_prefill,"
+                          f"{lat['decode_tokens_during_long_prefill']:.1f}")
         if attn_impl == "pallas":
             # ref-vs-pallas comparison row: same requests, same admission
             # trace, only the attention kernel impl differs
@@ -289,13 +483,26 @@ if __name__ == "__main__":
                     help="pallas = add the ref-vs-pallas comparison row "
                          "per layout (Pallas kernels; interpret mode "
                          "off-TPU)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="add a chunked-prefill engine row per layout "
+                         "(N prompt tokens per engine step, interleaved "
+                         "with decode; 0 = prefill-then-pack only)")
+    ap.add_argument("--arrival", choices=["batch", "poisson"],
+                    default="batch",
+                    help="poisson = bursty-arrival LATENCY rows (p50/p99 "
+                         "TTFT + inter-token latency, packed vs chunked; "
+                         "per-step device sync, not a throughput number)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="poisson arrivals per engine step")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable row list (tok/s per "
-                         "layout x impl, occupancy, recompile flags) to "
-                         "PATH, e.g. BENCH_serve.json")
+                         "layout x impl x admission mode, occupancy, "
+                         "recompile flags, latency percentiles) to PATH, "
+                         "e.g. BENCH_serve.json")
     a = ap.parse_args()
     run(requests=a.requests, max_batch=a.max_batch, gen_min=a.gen_min,
         gen_max=a.gen_max, seed=a.seed, reps=a.reps,
         layouts=[s.strip() for s in a.layout.split(",") if s.strip()],
         attn_impl=None if a.attn_impl == "ref" else a.attn_impl,
-        json_path=a.json)
+        json_path=a.json, prefill_chunk=a.prefill_chunk or None,
+        arrival=a.arrival, arrival_rate=a.arrival_rate)

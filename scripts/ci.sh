@@ -23,20 +23,28 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"
 
 if [[ "${FAST:-0}" != "1" ]]; then
   # serve-throughput smoke: machine-readable perf rows (tok/s per
-  # layout x impl, occupancy, recompile flags) -> BENCH_serve.json
+  # layout x impl x admission mode, occupancy, recompile flags, and the
+  # poisson-arrival TTFT/ITL latency rows with the packed-vs-chunked
+  # prefill comparison) -> BENCH_serve.json
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
+      --prefill-chunk 8 --arrival poisson \
       --json BENCH_serve.json
-  # ragged serving smoke rows on 8 fake devices, one per sharded
-  # layout registry entry (coplace_shmap = shard_map partial
-  # attention; interleave = GSPMD within-page token striping)
+  # ragged serving smoke rows on 8 fake devices, one per sharded layout
+  # registry entry (coplace_shmap = shard_map partial attention;
+  # interleave = GSPMD within-page token striping), each in both
+  # admission modes: prefill-then-pack and chunked slot-resident
+  # prefill (--prefill-chunk streams prompt KV into the sharded cache)
   for LAYOUT in coplace_shmap interleave; do
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
-        repro.launch.serve --arch smollm-360m --reduced \
-        --workload ragged --requests 4 --max-batch 2 \
-        --prompt-buckets 16,24 --gen-min 2 --gen-max 6 \
-        --layout "$LAYOUT" --admission balanced
+    for CHUNK in 0 8; do
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
+          repro.launch.serve --arch smollm-360m --reduced \
+          --workload ragged --requests 4 --max-batch 2 \
+          --prompt-buckets 16,24 --gen-min 2 --gen-max 6 \
+          --layout "$LAYOUT" --admission balanced \
+          --prefill-chunk "$CHUNK"
+    done
   done
 fi

@@ -56,6 +56,23 @@ class StreamCache:
     pos: Array  # (B, Hs, W)   absolute position stored in each slot; -1 empty
 
 
+def empty_fill_value(path: str):
+    """Empty-cache sentinel for a serve-state leaf identified by its
+    pytree key path — the single source of truth the constructors above
+    encode shape-wise (``make_paged_cache`` / ``make_stream_cache``):
+    tau_min +inf, tau_max -inf, page_start and the stream ring's ``pos``
+    -1, everything else 0. Consumed by the serving engine's dynamic-slot
+    reset (chunked admission) so a cleared slot row is exactly what a
+    fresh constructor would produce."""
+    if "tau_min" in path:
+        return jnp.inf
+    if "tau_max" in path:
+        return -jnp.inf
+    if "page_start" in path or path.endswith(".pos"):
+        return -1
+    return 0
+
+
 def make_full_cache(b, h_kv, capacity, d, dtype=jnp.bfloat16):
     z = jnp.zeros((b, h_kv, capacity, d), dtype)
     return FullCache(k=z, v=z)
@@ -305,6 +322,141 @@ def sharded_paged_append(k_pages, v_pages, tau_min, tau_max, page_start,
             tau_min.at[bi, hi, pgl].set(min_wr),
             tau_max.at[bi, hi, pgl].set(max_wr),
             page_start.at[bi, hi, pgl].set(start_wr.astype(jnp.int32)))
+
+
+def _ext_overflow(a: Array) -> Array:
+    """Append one transient overflow slot on axis 2 (the page / sequence
+    dim). Chunk appends route masked-out tokens there so no valid write
+    ever aliases a masked one (scatter with duplicate indices and
+    different values is undefined); callers slice the slot away with
+    ``[:, :, :n]`` after the scatter — the stream_cache_from_prefill
+    trick."""
+    pad = [(0, 0)] * a.ndim
+    pad[2] = (0, 1)
+    return jnp.pad(a, pad)
+
+
+def paged_cache_append_chunk(cache: PagedCache, k_new, v_new, start,
+                             chunk_len, *, active=None, phys_shards: int = 1):
+    """Multi-token ragged chunk append (chunked prefill).
+
+    k_new/v_new: (B, C, Hr, D) — per-slot prompt chunks, left-aligned.
+    Slot ``b`` appends its first ``chunk_len[b]`` tokens at absolute
+    positions ``start[b] .. start[b]+chunk_len[b]-1``; the rest of the
+    chunk (and every row with ``active`` False) appends nothing. Page
+    min/max metadata merges via scatter-min/max — exact for chunks that
+    open, fill, or straddle pages, PROVIDED the touched pages start from
+    the empty sentinels (the engine resets a slot's rows at admission).
+
+    ``phys_shards`` > 1 routes each logical page through
+    ``paging.interleave_slot`` (the coplace_shmap physical round-robin
+    striping); the metadata keeps absolute positions, so validity math
+    is layout-independent. Invalid tokens scatter into a transient
+    overflow page that is sliced away (the stream_cache_from_prefill
+    trick), so no valid write ever aliases a masked one.
+    """
+    from repro.core import paging
+
+    b, cch, h, d = k_new.shape
+    cap = cache.k_pages.shape[2]
+    p_sz = cache.k_pages.shape[3]
+    start = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+    clen = jnp.broadcast_to(chunk_len, (b,)).astype(jnp.int32)
+    act = _row_mask(active, b)
+    j = jnp.arange(cch, dtype=jnp.int32)
+    pos = start[:, None] + j[None, :]                       # (B, C)
+    valid = (j[None, :] < clen[:, None]) & act[:, None]
+    page_log = jnp.clip(pos // p_sz, 0, cap - 1)
+    phys = paging.interleave_slot(page_log, cap, phys_shards)
+    off = pos % p_sz
+    pg_eff = jnp.where(valid, phys, cap)                    # cap = overflow
+    ext = _ext_overflow
+    bi = jnp.arange(b)[:, None, None]
+    hi = jnp.arange(h)[None, :, None]
+    pg = pg_eff[:, None, :]
+    of = off[:, None, :]
+    kt = k_new.transpose(0, 2, 1, 3)                        # (B, H, C, D)
+    vt = v_new.transpose(0, 2, 1, 3)
+    k_pages = ext(cache.k_pages).at[bi, hi, pg, of].set(
+        kt.astype(cache.k_pages.dtype))[:, :, :cap]
+    v_pages = ext(cache.v_pages).at[bi, hi, pg, of].set(
+        vt.astype(cache.v_pages.dtype))[:, :, :cap]
+    kf = kt.astype(jnp.float32)
+    tau_min = ext(cache.tau_min).at[bi, hi, pg].min(kf)[:, :, :cap]
+    tau_max = ext(cache.tau_max).at[bi, hi, pg].max(kf)[:, :, :cap]
+    ps_val = jnp.broadcast_to((page_log * p_sz)[:, None, :], (b, h, cch))
+    page_start = ext(cache.page_start).at[bi, hi, pg].set(
+        ps_val.astype(jnp.int32))[:, :, :cap]
+    return dataclasses.replace(
+        cache, k_pages=k_pages, v_pages=v_pages, tau_min=tau_min,
+        tau_max=tau_max, page_start=page_start)
+
+
+def stream_cache_append_chunk(cache: StreamCache, k_new, v_new, start,
+                              chunk_len, *, sink: int, active=None):
+    """Chunk append into the sink+local ring (chunked prefill).
+
+    k_new/v_new: (B, C, Hs, D). Equivalent to appending the chunk's
+    tokens one at a time with ``stream_cache_append`` — expressed in
+    closed form: each ring slot keeps the LAST appended position mapping
+    to it (later positions win, matching ring semantics), so a chunk
+    larger than the ring is handled exactly.
+    """
+    b, cch, h, d = k_new.shape
+    w = cache.k.shape[2]
+    local_cap = w - sink
+    start = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+    clen = jnp.broadcast_to(chunk_len, (b,)).astype(jnp.int32)
+    act = _row_mask(active, b)
+    e = start + clen - 1                                    # last position
+    wi = jnp.arange(w, dtype=jnp.int32)
+    # the position written LAST into each slot: sink slots hold their own
+    # index; ring slot w holds the largest appended p >= sink with
+    # (p - sink) % local_cap == w - sink
+    r = wi[None, :] - sink
+    m = (e[:, None] - sink - r) % local_cap                 # (B, W) >= 0
+    p_ring = e[:, None] - m
+    p_tgt = jnp.where(wi[None, :] < sink, wi[None, :], p_ring)
+    written = (act[:, None] & (p_tgt >= start[:, None])
+               & (p_tgt <= e[:, None])
+               & ((wi[None, :] < sink) | (p_tgt >= sink)))
+    jidx = jnp.clip(p_tgt - start[:, None], 0, cch - 1)     # chunk offset
+    kt = k_new.transpose(0, 2, 1, 3)                        # (B, H, C, D)
+    vt = v_new.transpose(0, 2, 1, 3)
+    take = lambda a: jnp.take_along_axis(
+        a, jnp.broadcast_to(jidx[:, None, :, None], (b, h, w, 1)), axis=2)
+    wr = written[:, None, :, None]
+    k2 = jnp.where(wr, take(kt).astype(cache.k.dtype), cache.k)
+    v2 = jnp.where(wr, take(vt).astype(cache.v.dtype), cache.v)
+    pos2 = jnp.where(written[:, None, :],
+                     jnp.broadcast_to(p_tgt[:, None, :], (b, h, w)),
+                     cache.pos)
+    return StreamCache(k=k2, v=v2, pos=pos2.astype(jnp.int32))
+
+
+def full_cache_append_chunk(cache: FullCache, k_new, v_new, start,
+                            chunk_len, active=None):
+    """Chunk append for the dense baseline cache (chunked prefill of
+    full-attention / plain-window layers). k_new/v_new: (B, C, Hkv, D)
+    appended at positions ``start .. start+chunk_len-1`` per slot."""
+    b, cch, h, d = k_new.shape
+    s = cache.k.shape[2]
+    start = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+    clen = jnp.broadcast_to(chunk_len, (b,)).astype(jnp.int32)
+    act = _row_mask(active, b)
+    j = jnp.arange(cch, dtype=jnp.int32)
+    pos = start[:, None] + j[None, :]
+    valid = (j[None, :] < clen[:, None]) & act[:, None]
+    sl_eff = jnp.where(valid, jnp.clip(pos, 0, s - 1), s)   # s = overflow
+    ext = _ext_overflow
+    bi = jnp.arange(b)[:, None, None]
+    hi = jnp.arange(h)[None, :, None]
+    sl = sl_eff[:, None, :]
+    kt = k_new.transpose(0, 2, 1, 3)
+    vt = v_new.transpose(0, 2, 1, 3)
+    return FullCache(
+        k=ext(cache.k).at[bi, hi, sl].set(kt.astype(cache.k.dtype))[:, :, :s],
+        v=ext(cache.v).at[bi, hi, sl].set(vt.astype(cache.v.dtype))[:, :, :s])
 
 
 def pool_append(cache: PagedCache, k_new: Array, v_new: Array, length: Array,

@@ -185,6 +185,90 @@ def init_decode_state(spec: AttnSpec, k: Array, v: Array, length: int,
     return paged, stream
 
 
+def chunk_prefill_attention(
+    spec: AttnSpec,
+    q: Array,                  # (B, C, Hq, D) roped at the chunk positions
+    k_new: Array,              # (B, C, Hkv, D) roped
+    v_new: Array,              # (B, C, Hkv, D)
+    paged: cachelib.PagedCache,
+    stream: cachelib.StreamCache,
+    start: Array,              # (B,) context length BEFORE the chunk
+    chunk_len: Array,          # (B,) valid tokens in the chunk
+    active: Array | None = None,   # (B,) bool — slots prefilling this step
+    *,
+    perm: Array | None = None,
+    phys_shards: int = 1,
+):
+    """One chunked-prefill step: append a prompt chunk into the serve
+    caches and attend each chunk token causally over everything before it
+    (retrieval heads: full causal, exactly single-shot prefill; streaming
+    heads: sink+local). Returns (out (B, C, Hq, D), paged', stream').
+
+    There is no page selection during prefill — selection state
+    (sel_idx / importance) is untouched, matching the single-shot
+    prefill-then-pack constructor. Rows past ``chunk_len`` (and inactive
+    slots) append nothing; their outputs are garbage the caller ignores.
+    Touched pages must start from the empty sentinels (the engine resets
+    a slot's cache rows at admission), so the incremental min/max
+    metadata merge is exact.
+
+    ``phys_shards`` > 1 applies the coplace_shmap round-robin physical
+    page order on append; attention masks are built from absolute
+    positions (core/paging.py chunk_* helpers) so the math is identical
+    on every layout. Numerics: the chunk body reassociates float sums
+    differently from the single-shot flash prefill, so chunked and
+    packed admission agree to float tolerance — greedy traces match off
+    argmax ties (EXPERIMENTS.md §Serving experiments).
+    """
+    h2 = spec.h2
+    g = spec.group
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    b, cch = q.shape[0], q.shape[1]
+    act = jnp.ones((b,), bool) if active is None else \
+        jnp.asarray(active).reshape(b)
+    start = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+    pos_q = paging.chunk_positions(start, cch)              # (B, C)
+
+    outs = []
+    if nr > 0:
+        paged = cachelib.paged_cache_append_chunk(
+            paged, kp[:, :, :nr], vp[:, :, :nr], start, chunk_len,
+            active=act, phys_shards=phys_shards)
+        p_sz = paged.k_pages.shape[3]
+        cap_pages = paged.k_pages.shape[2]
+        kb = paged.k_pages.reshape(b, nr, cap_pages * p_sz, -1)
+        vb = paged.v_pages.reshape(b, nr, cap_pages * p_sz, -1)
+        key_pos, key_ok = paging.paged_key_positions(paged.page_start, p_sz)
+        valid = paging.chunk_causal_validity(key_pos, key_ok, pos_q)
+        outs.append(kops.chunk_attention(qp[:, :, : nr * g], kb, vb, valid,
+                                         impl=spec.impl))
+    if spec.n_streaming > 0:
+        ns = spec.n_streaming
+        k_s = kp[:, :, nr:]                                 # (B, C, Hs, D)
+        v_s = vp[:, :, nr:]
+        # attend against [pre-append ring ∥ chunk keys]: ring slots can be
+        # overwritten WITHIN a chunk (positions local_cap apart share a
+        # slot), so the post-append ring would lose keys still inside an
+        # early chunk query's window
+        kr = jnp.concatenate([stream.k, k_s.transpose(0, 2, 1, 3)], axis=2)
+        vr = jnp.concatenate([stream.v, v_s.transpose(0, 2, 1, 3)], axis=2)
+        chunk_pos = jnp.broadcast_to(pos_q[:, None, :], (b, ns, cch))
+        kpos = jnp.concatenate([stream.pos, chunk_pos], axis=2)
+        valid_s = paging.chunk_stream_validity(kpos, pos_q, sink=h2.sink,
+                                               local=h2.local)
+        outs.append(kops.chunk_attention(qp[:, :, nr * g:], kr, vr, valid_s,
+                                         impl=spec.impl))
+        stream = cachelib.stream_cache_append_chunk(
+            stream, k_s, v_s, start, chunk_len, sink=h2.sink, active=act)
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return _permute_q(out, _inverse_perm(perm), g), paged, stream
+
+
 def _local_cap(h2: H2ealConfig) -> int:
     # ring capacity: local window + one page of slack so the boundary page
     # semantics match the paged side

@@ -24,6 +24,12 @@ example):
 * ``prefill(spec, k, v, length, capacity, perm)`` — build the decode
   state (paged + stream caches) from prefill K/V, in whatever physical
   page order the layout wants.
+* ``prefill_chunk(spec, state, inputs)`` — append one prompt chunk of a
+  chunked (slot-resident) prefill directly into the layout's sharded
+  caches and attend it causally, over a single :class:`PrefillInputs`
+  pytree (mirroring ``DecodeInputs``). This is how the serving engine
+  prefills without ever leaving the batched sharded state — no batch-1
+  unsharded prefill + pack.
 * ``decode(spec, state, inputs)`` / ``ragged_decode(spec, state,
   inputs)`` — one decode step against the layout's cache placement.
   Both take a single :class:`DecodeInputs` pytree instead of the long
@@ -55,6 +61,7 @@ Registered layouts:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -71,8 +78,11 @@ LAYOUT_INTERLEAVE = "interleave"
 LAYOUT_COPLACE_SHMAP = "coplace_shmap"
 
 # legacy spellings accepted for one release (None/"auto" predate the
-# registry; the engine and launch CLIs used them for the default path)
+# registry; the engine and launch CLIs used them for the default path).
+# resolve_layout() emits a one-shot DeprecationWarning per spelling,
+# mirroring kernels/ops.resolve_impl's impl="kernel" treatment.
 _ALIASES = {None: LAYOUT_DEFAULT, "auto": LAYOUT_DEFAULT}
+_warned_aliases: set = set()
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +118,32 @@ class DecodeInputs:
 jax.tree_util.register_dataclass(
     DecodeInputs,
     data_fields=["q", "k_new", "v_new", "lengths", "active", "need_select"],
+    meta_fields=[])
+
+
+@dataclasses.dataclass
+class PrefillInputs:
+    """Everything a layout's ``prefill_chunk`` hook consumes, as one
+    pytree (the chunked-prefill mirror of :class:`DecodeInputs`).
+
+    q: (B, C, Hq, D) roped at each slot's chunk positions; k_new/v_new:
+    (B, C, Hkv, D). start: (B,) context length before the chunk (the
+    slot's tokens-so-far); chunk_len: (B,) valid tokens in this chunk
+    (rows past it are padding); active: (B,) bool — slots taking a
+    chunk this step (None = all).
+    """
+
+    q: Array
+    k_new: Array
+    v_new: Array
+    start: Array
+    chunk_len: Array
+    active: Optional[Array] = None
+
+
+jax.tree_util.register_dataclass(
+    PrefillInputs,
+    data_fields=["q", "k_new", "v_new", "start", "chunk_len", "active"],
     meta_fields=[])
 
 
@@ -183,6 +219,14 @@ class AttentionLayout:
         """Build the decode state {"paged", "stream"} from prefill K/V."""
         raise NotImplementedError(self.name)
 
+    def prefill_chunk(self, spec, state: Dict, inputs: PrefillInputs, *,
+                      perm=None):
+        """Chunked prefill: append one prompt chunk directly into the
+        layout's caches and attend it causally
+        -> (out (B, C, Hq, D), new state)."""
+        raise NotImplementedError(
+            f"layout {self.name!r} does not support chunked prefill")
+
     # -- decode -----------------------------------------------------------
     def decode(self, spec, state: Dict, inputs: DecodeInputs, *,
                do_select: bool, perm=None):
@@ -211,18 +255,42 @@ def available_layouts() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def resolve_layout(name) -> str:
-    """Canonicalize a layout name; raise ValueError if unknown."""
+def _lookup(name) -> AttentionLayout:
+    """Canonicalize (silently) and fetch; raise ValueError if unknown."""
     name = _ALIASES.get(name, name)
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown attention layout {name!r}; registered layouts: "
             f"{', '.join(available_layouts())}")
-    return name
+    return _REGISTRY[name]
+
+
+def resolve_layout(name) -> str:
+    """Canonicalize a layout name; raise ValueError if unknown.
+
+    The pre-registry spellings ``None`` and ``"auto"`` resolve to
+    ``"default"`` but emit a DeprecationWarning once per process (per
+    spelling) — they will be removed after one release. Canonical names
+    resolve silently.
+    """
+    if name in _ALIASES:
+        canonical = _ALIASES[name]
+        if name not in _warned_aliases:
+            _warned_aliases.add(name)
+            warnings.warn(
+                f"layout={name!r} is a deprecated alias for "
+                f"{canonical!r} and will be removed; pass "
+                f"{canonical!r} instead", DeprecationWarning,
+                stacklevel=2)
+    return _lookup(name).name
 
 
 def get_layout(name) -> AttentionLayout:
-    return _REGISTRY[resolve_layout(name)]
+    """Fetch a layout instance by name. Unlike ``resolve_layout`` this is
+    the internal (model-layer) lookup: legacy aliases canonicalize
+    silently — the deprecation nudge fires once at the user-facing
+    resolution sites (Engine construction, step builders, CLIs)."""
+    return _lookup(name)
 
 
 def dispatch_decode(layout, spec, state: Dict, inputs: DecodeInputs, *,
@@ -232,6 +300,13 @@ def dispatch_decode(layout, spec, state: Dict, inputs: DecodeInputs, *,
     lay = get_layout(layout)
     fn = lay.ragged_decode if inputs.is_ragged else lay.decode
     return fn(spec, state, inputs, do_select=do_select, perm=perm)
+
+
+def dispatch_prefill_chunk(layout, spec, state: Dict,
+                           inputs: PrefillInputs, *, perm=None):
+    """Route one chunked-prefill step to ``layout``'s prefill_chunk
+    hook."""
+    return get_layout(layout).prefill_chunk(spec, state, inputs, perm=perm)
 
 
 # ---------------------------------------------------------------------------
@@ -258,6 +333,19 @@ class DefaultLayout(AttentionLayout):
         paged, stream = hattn.init_decode_state(spec, k, v, length,
                                                 capacity, perm)
         return {"paged": paged, "stream": stream}
+
+    #: physical page→slot striping factor for chunk appends (the
+    #: GSPMD layouts keep logical page order; coplace_shmap overrides)
+    def _chunk_phys_shards(self) -> int:
+        return 1
+
+    def prefill_chunk(self, spec, state, inputs, *, perm=None):
+        out, paged, stream = hattn.chunk_prefill_attention(
+            spec, inputs.q, inputs.k_new, inputs.v_new,
+            state["paged"], state["stream"], inputs.start,
+            inputs.chunk_len, inputs.active, perm=perm,
+            phys_shards=self._chunk_phys_shards())
+        return out, {"paged": paged, "stream": stream}
 
     def decode(self, spec, state, inputs, *, do_select, perm=None):
         out, paged, stream = hattn.decode_attention(
@@ -373,18 +461,29 @@ class CoplaceShmapLayout(CoplaceLayout):
 
     name = LAYOUT_COPLACE_SHMAP
 
-    def prefill(self, spec, k, v, length, capacity, perm=None) -> Dict:
+    @staticmethod
+    def _ambient_shards() -> int:
+        """Round-robin striping factor from the ambient mesh (prefill and
+        chunked prefill both run inside the engine's mesh context)."""
         from repro.runtime import hints
 
-        # physical round-robin page permutation sized to the ambient
-        # mesh (prefill runs inside the engine's mesh context)
-        nsh = 1
         mesh = hints.current_mesh()
         if mesh is not None and "model" in mesh.axis_names:
-            nsh = int(mesh.shape["model"])
+            return int(mesh.shape["model"])
+        return 1
+
+    def prefill(self, spec, k, v, length, capacity, perm=None) -> Dict:
         paged, stream = hattn.init_decode_state(
-            spec, k, v, length, capacity, perm, interleave_shards=nsh)
+            spec, k, v, length, capacity, perm,
+            interleave_shards=self._ambient_shards())
         return {"paged": paged, "stream": stream}
+
+    # chunk appends land on the same physical round-robin page order the
+    # shard_map decode body expects; the chunk attention itself is the
+    # single-program body partitioned by GSPMD (positions, not slots,
+    # drive its masks — see core/paging.py chunk_* helpers)
+    def _chunk_phys_shards(self) -> int:
+        return self._ambient_shards()
 
     def decode(self, spec, state, inputs, *, do_select, perm=None):
         out, paged, stream = hattn.decode_attention_coplace(

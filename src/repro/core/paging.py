@@ -224,6 +224,62 @@ def token_validity(
     return (nonempty & in_ctx & ok & ~sentinel).reshape(b, h, n * page)
 
 
+# ---------------------------------------------------------------------------
+# Chunked prefill (multi-token) validity
+#
+# During chunked prefill there is no page selection: retrieval heads
+# attend FULL causal (exactly like single-shot prefill), streaming heads
+# sink+local. Keys live in cache buffers whose layout is physical (pages
+# may be slot-permuted, the stream ring wraps), so validity is computed
+# from absolute POSITIONS, never from slot indices — identical math on
+# every layout.
+# ---------------------------------------------------------------------------
+
+
+def chunk_positions(start: Array, chunk: int) -> Array:
+    """Absolute positions (B, C) of a left-aligned chunk starting at
+    ``start`` (B,). Rows are valid only below the caller's chunk_len."""
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    return start[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+
+
+def paged_key_positions(page_start: Array, page: int):
+    """(key_pos, key_ok) for the flattened page buffer.
+
+    page_start: (B, H, C) absolute first-token positions (-1 = empty).
+    Returns key_pos (B, H, C*P) int32 and key_ok (B, H, C*P) bool. Works
+    for any physical page order (the metadata carries absolute
+    positions).
+    """
+    b, h, c = page_start.shape
+    offs = jnp.arange(page, dtype=jnp.int32)
+    pos = page_start[:, :, :, None] + offs[None, None, None, :]
+    ok = jnp.broadcast_to((page_start >= 0)[:, :, :, None], pos.shape)
+    return pos.reshape(b, h, c * page), ok.reshape(b, h, c * page)
+
+
+def chunk_causal_validity(key_pos: Array, key_ok: Array,
+                          pos_q: Array) -> Array:
+    """Causal chunk-prefill mask: (B, H, Cq, T) — key attended iff it
+    exists and its position is <= the query's. key_pos/key_ok: (B, H, T);
+    pos_q: (B, Cq). Appended-but-unwritten page offsets are excluded by
+    the causal bound alone (their positions are >= every chunk query)."""
+    return (key_ok[:, :, None, :]
+            & (key_pos[:, :, None, :] <= pos_q[:, None, :, None]))
+
+
+def chunk_stream_validity(key_pos: Array, pos_q: Array, *, sink: int,
+                          local: int) -> Array:
+    """Sink+local chunk-prefill mask, matching the streaming decode mask
+    ((pos < sink) | (pos > q - local)) and the flash window semantics.
+    key_pos: (B, H, T) with -1 = empty slot; pos_q: (B, Cq).
+    Returns (B, H, Cq, T)."""
+    kp = key_pos[:, :, None, :]
+    pq = pos_q[:, None, :, None]
+    return (key_pos >= 0)[:, :, None, :] & (kp <= pq) & (
+        (kp < sink) | (kp > pq - local))
+
+
 def accumulate_importance(importance: Array, scores: Array) -> Array:
     """Paper: accumulate the computed relevance score at each step.
 

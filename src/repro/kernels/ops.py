@@ -71,6 +71,16 @@ def paged_attention(q, k, v, valid, *, impl="ref"):
     return pk.paged_attention(q, k, v, valid, interpret=_INTERPRET)
 
 
+def chunk_attention(q, k, v, valid, *, impl="ref"):
+    """Multi-query attention over a gathered KV buffer with per-query
+    validity (the chunked-prefill body; kernels/ref.py for the shape
+    contract). There is no dedicated Pallas kernel yet — both impls
+    lower the jnp reference, so chunked prefill is impl-invariant and a
+    ref-vs-pallas engine pair still emits identical prompt KV."""
+    resolve_impl(impl)  # validate; both impls share the reference body
+    return _ref.chunk_attention_ref(q, k, v, valid)
+
+
 def paged_attention_partial(q, k, v, valid, *, impl="ref"):
     """Per-shard flash partials (m, l, o) — see
     kernels.ref.paged_attention_partial_ref for the shape contract."""

@@ -211,6 +211,31 @@ def paged_attention_ref(
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def chunk_attention_ref(q: Array, k: Array, v: Array, valid: Array) -> Array:
+    """Multi-query attention over a gathered KV buffer (chunked prefill).
+
+    q: (B, Cq, Hq, D) — one chunk of queries per slot; k/v:
+    (B, Hkv, T, D); valid: (B, Hkv, Cq, T) bool — per-QUERY validity
+    (causal / sink+local masks are computed by the caller from absolute
+    positions). The single-query ``paged_attention_ref`` is the Cq == 1
+    special case. Returns (B, Cq, Hq, D); all-invalid rows yield 0.
+    """
+    b, cq, hq, d = q.shape
+    h_kv = k.shape[1]
+    group = hq // h_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qg = q.reshape(b, cq, h_kv, group, d).astype(k.dtype)
+    logits = jnp.einsum("bchgd,bhtd->bhgct", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[:, :, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    any_valid = jnp.any(valid, axis=-1)[:, :, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhgct,bhtd->bchgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, cq, hq, d).astype(q.dtype)
+
+
 def paged_attention_partial_ref(q, k, v, valid):
     """Partial (unnormalized) attention for cross-shard combine.
 

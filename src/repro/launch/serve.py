@@ -10,12 +10,16 @@ variant), cheaper `reuse` steps in between. Greedy sampling.
 ``--workload ragged``: slot-based continuous batching via
 ``repro.serving.Engine``. Requests draw prompt lengths from a small set
 of buckets and generation lengths from [gen-min, gen-max]; the engine
-admits them into free slots of a fixed max-batch compiled shape
-(prefill-then-pack), retires finished slots without recompiling, and
-keeps per-slot share-window selection cadence. Reports throughput, batch
-occupancy, per-function jit compile counts, and (with
-``--report-balance``) the sched/balance imbalance score of the final
-ragged batch on a 4x4 bank grid.
+admits them into free slots of a fixed max-batch compiled shape,
+retires finished slots without recompiling, and keeps per-slot
+share-window selection cadence. ``--prefill-chunk N`` switches
+admission from prefill-then-pack to chunked slot-resident prefill: at
+most N prompt tokens per engine step stream directly into the slot's
+(possibly sharded) caches, interleaved with decode — bounded
+time-to-first-token on long prompts (docs/serving.md). Reports
+throughput, batch occupancy, admissions/chunk counts, per-function jit
+compile counts, and (with ``--report-balance``) the sched/balance
+imbalance score of the final ragged batch on a 4x4 bank grid.
 
 ``--layout`` accepts any core/layouts registry entry:
 ``coplace_shmap`` runs the ragged workload under shard_map
@@ -56,7 +60,7 @@ from repro.runtime import serve as serve_rt
 
 
 def generate(cfg, params, prompts, *, gen: int, capacity: int,
-             mesh=None, layout=None, h2eal=True, greedy=True,
+             mesh=None, layout="default", h2eal=True, greedy=True,
              attn_impl: str = "ref"):
     """Lockstep generation. prompts: (B, S) int32.
     Returns (tokens (B, gen), stats dict)."""
@@ -122,8 +126,8 @@ def make_ragged_requests(cfg, *, n: int, prompt_buckets, gen_min: int,
 
 def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
                prompt_buckets, report_balance: bool = False,
-               layout=None, admission: str = "fifo",
-               attn_impl: str = "ref"):
+               layout="default", admission: str = "fifo",
+               attn_impl: str = "ref", prefill_chunk=None):
     """Serve ``requests`` with the continuous-batching engine.
 
     ``layout`` is any core/layouts registry entry (e.g. "coplace_shmap"
@@ -132,7 +136,10 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
     within-page tokens over the 'data' axis under GSPMD);
     ``attn_impl="pallas"`` swaps the decode body for the Pallas kernels
     (interpret mode off-TPU) — fixed at engine construction, never per
-    step. Returns (completions, stats dict)."""
+    step. ``prefill_chunk=N`` switches admission from prefill-then-pack
+    to chunked slot-resident prefill (≤ N prompt tokens per engine step,
+    interleaved with decode — docs/serving.md). Returns
+    (completions, stats dict)."""
     from repro.core import layouts as layoutlib
     from repro.serving import Engine
 
@@ -144,15 +151,19 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
             "coplace_shmap or interleave)")
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=prompt_buckets, layout=layout,
-                 admission=admission, impl=attn_impl)
+                 admission=admission, impl=attn_impl,
+                 prefill_chunk=prefill_chunk)
     completions = eng.run(requests)
     s = eng.stats
     stats = {
         "wall_s": s.wall_s,
         "tokens_per_s": s.tokens_per_s,
         "decode_steps": s.decode_steps,
+        "engine_steps": s.engine_steps,
         "select_steps": s.select_steps,
         "reuse_steps": s.reuse_steps,
+        "admissions": s.admissions,
+        "prefill_chunks": s.prefill_chunks,
         "occupancy": s.occupancy,
         "tokens_out": s.tokens_out,
         "admission_reorders": s.admission_reorders,
@@ -173,8 +184,10 @@ def _balance_report(cfg, eng):
                              slot_head_load, solve_tiling)
 
     ctx = [int(c) for c in eng.batch.lengths if c > 0]
+    s = eng.stats
+    base = {"admissions": s.admissions, "prefill_chunks": s.prefill_chunks}
     if not ctx:
-        return {}
+        return base
     coords = grid_coords(4, 4)[: cfg.num_kv_heads]
     spec_nr = max(cfg.num_kv_heads
                   - round(cfg.num_kv_heads * cfg.h2eal.static_sparsity), 0)
@@ -190,10 +203,11 @@ def _balance_report(cfg, eng):
                               page_size=cfg.h2eal.page_size)
     lpt = map_slots([slot_head_load("retrieval", cfg.h2eal, c) for c in ctx],
                     max(n_sh, 1))
-    return {"imbalance_naive": imbalance(u),
-            "imbalance_coplaced": imbalance(b),
-            "page_load_imbalance": load_imbalance(pages),
-            "slot_lpt_imbalance": lpt.imbalance}
+    return dict(base,
+                imbalance_naive=imbalance(u),
+                imbalance_coplaced=imbalance(b),
+                page_load_imbalance=load_imbalance(pages),
+                slot_lpt_imbalance=lpt.imbalance)
 
 
 def main(argv=None):
@@ -217,12 +231,19 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=0,
                     help="cache capacity in tokens (0 = auto)")
     ap.add_argument("--report-balance", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked slot-resident prefill: feed at most N "
+                         "prompt tokens per engine step, interleaved with "
+                         "decode (bounded TTFT, no head-of-line blocking "
+                         "on long prompts). 0 = prefill-then-pack "
+                         "admission (docs/serving.md)")
     from repro.core.layouts import available_layouts
     ap.add_argument("--layout",
                     choices=["auto"] + list(available_layouts()),
-                    default="auto",
+                    default="default",
                     help="serve-cache layout (ragged workload), a "
-                         "core/layouts registry entry; auto = default. "
+                         "core/layouts registry entry ('auto' is a "
+                         "deprecated alias for default). "
                          "coplace_shmap = shard_map co-placement, "
                          "interleave = GSPMD within-page token striping, "
                          "both on a host-local mesh")
@@ -250,20 +271,22 @@ def main(argv=None):
         reqs = make_ragged_requests(
             cfg, n=args.requests, prompt_buckets=buckets,
             gen_min=args.gen_min, gen_max=args.gen_max, seed=args.seed)
-        layout = None if args.layout == "auto" else args.layout
         completions, stats = run_ragged(
             cfg, params, reqs, max_batch=args.max_batch, capacity=capacity,
             prompt_buckets=buckets, report_balance=args.report_balance,
-            layout=layout, admission=args.admission,
-            attn_impl=args.attn_impl)
+            layout=args.layout, admission=args.admission,
+            attn_impl=args.attn_impl,
+            prefill_chunk=args.prefill_chunk or None)
         print(f"[serve] arch={cfg.name} workload=ragged "
               f"layout={args.layout} admission={args.admission} "
               f"attn_impl={args.attn_impl} "
+              f"prefill_chunk={args.prefill_chunk or 'packed'} "
               f"requests={len(completions)} steps={stats['decode_steps']} "
               f"occupancy={stats['occupancy']:.2f} "
               f"({stats['tokens_per_s']:.1f} tok/s)")
         print(f"[serve] select/reuse steps: {stats['select_steps']}/"
-              f"{stats['reuse_steps']}; "
+              f"{stats['reuse_steps']}; admissions/chunks: "
+              f"{stats['admissions']}/{stats['prefill_chunks']}; "
               f"admission reorders: {stats['admission_reorders']}; "
               f"jit compiles: {stats['jit_cache']}")
         if "balance" in stats and stats["balance"]:

@@ -142,6 +142,70 @@ def prefill(cfg: ArchConfig, params, batch, *, capacity: int, plan=None,
     return logits, state
 
 
+def prefill_chunk(cfg: ArchConfig, params, state, tokens, *, chunk_len,
+                  active, plan=None, impl: str = "ref", layout=None):
+    """Feed one prompt chunk per slot into the batched serve state
+    (chunked, slot-resident prefill — the admission half of the engine's
+    mixed prefill+decode step).
+
+    tokens: (B, C) int32 — left-aligned per-slot chunks, padded past
+    ``chunk_len`` ((B,), valid tokens per slot). ``active`` (B,) marks
+    the slots taking a chunk this step; the rest of the batch (decoding
+    or free slots) appends nothing and keeps its length. Each slot's
+    chunk starts at its current ``state["length"]``. Returns
+    (last-chunk-token logits (B, V), new state) — the logits row of a
+    slot whose prompt just completed is its first-token distribution
+    (garbage for every other row). C is static, so one compiled program
+    serves every chunk schedule (the zero-recompile invariant).
+    """
+    assert not cfg.embed_frontend_stub, (
+        "chunked prefill feeds token chunks through the embedding; "
+        "frontend-stub archs use prefill-then-pack admission")
+    plan = plan if plan is not None else T.default_plan(cfg)
+    start = jnp.asarray(state["length"], jnp.int32).reshape(-1)   # (B,)
+    x = jnp.take(params["embed"], tokens, axis=0)                 # (B,C,d)
+    cch = tokens.shape[1]
+    pos_q = start[:, None] + jnp.arange(cch, dtype=jnp.int32)
+    rope = _rope(cfg, pos_q)                                      # (B,C,half)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32).reshape(-1)
+    active = jnp.asarray(active).reshape(-1)
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    def period_fn(x, xs):
+        params_p, plan_p, cache_p = xs
+        new_caches = {}
+        for pos in range(p_len):
+            x, c = T.block_prefill_chunk(
+                cfg, pos, params_p[f"pos{pos}"], plan_p[f"pos{pos}"], x,
+                rope, cache_p[f"pos{pos}"], start=start,
+                chunk_len=chunk_len, active=active, impl=impl,
+                layout=layout)
+            new_caches[f"pos{pos}"] = c
+        return x, new_caches
+
+    new_len = jnp.where(active, start + chunk_len, start)
+    new_state: dict[str, Any] = {
+        "length": new_len.astype(jnp.asarray(state["length"]).dtype),
+        "blocks": {}, "rem": {}}
+    if n_per > 0:
+        x, caches = jax.lax.scan(
+            period_fn, x,
+            (params["blocks"], plan["blocks"], state["blocks"]))
+        new_state["blocks"] = caches
+    for r in range(n_rem):
+        x, c = T.block_prefill_chunk(
+            cfg, r, params["rem"][f"rem{r}"], plan["rem"][f"rem{r}"], x,
+            rope, state["rem"][f"rem{r}"], start=start,
+            chunk_len=chunk_len, active=active, impl=impl, layout=layout)
+        new_state["rem"][f"rem{r}"] = c
+    # logits at each slot's LAST valid chunk position (first-token
+    # emission for slots whose prompt completed this step)
+    idx = jnp.clip(chunk_len - 1, 0, cch - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return unembed(cfg, params, x_last), new_state
+
+
 def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
                 do_select: bool = True, impl: str = "ref", layout=None,
                 active=None, need_select=None):

@@ -309,6 +309,62 @@ def block_prefill(cfg: ArchConfig, pos: int, p, plan, x, rope, *,
     return x, cache
 
 
+def block_prefill_chunk(cfg: ArchConfig, pos: int, p, plan, x, rope, cache,
+                        *, start, chunk_len, active, impl="ref",
+                        layout=None):
+    """Chunked prefill: one prompt chunk through one block. x: (B, C, d);
+    ``rope`` is (cos, sin) at each slot's chunk positions (B, C, half);
+    ``cache`` is the block's serve cache being grown in place. ``start``
+    (B,) is each slot's context before the chunk, ``chunk_len`` (B,) its
+    valid tokens, ``active`` (B,) the slots prefilling this step. Rows
+    past chunk_len / inactive slots append nothing and produce garbage
+    activations (attention masks keep them out of every other position;
+    the FFN is pointwise). Only attention mixers support chunked prefill
+    — recurrent mixers (mamba2/xlstm) would need a chunk-resumable scan
+    state and keep the prefill-then-pack path (the engine validates at
+    construction)."""
+    from repro.runtime import hints
+    p = hints.unshard_block_params(p)
+    x = hints.act(x)
+    mixer = cfg.mixer_for_layer(pos)
+    if mixer != MIXER_ATTENTION:
+        raise NotImplementedError(
+            f"chunked prefill supports attention mixers only (layer {pos} "
+            f"is {mixer!r}); use prefill-then-pack admission")
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    spec = attn_spec(cfg, pos, impl)
+    q, k, v = _qkv(cfg, p, h)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    b, cch = q.shape[0], q.shape[1]
+    if spec.h2.enabled and spec.window == 0:
+        inputs = layoutlib.PrefillInputs(
+            q=q, k_new=k, v_new=v, start=start, chunk_len=chunk_len,
+            active=active)
+        o, cache = layoutlib.dispatch_prefill_chunk(
+            layout, spec, cache, inputs, perm=plan["perm"])
+    else:  # full-attention baseline / plain window layer
+        from repro.core import paging
+        full = cachelib.full_cache_append_chunk(
+            cache["full"], k, v, start, chunk_len, active=active)
+        pos_q = paging.chunk_positions(start, cch)
+        key_pos = jnp.arange(full.k.shape[2], dtype=jnp.int32)
+        kp = key_pos[None, None, None, :]
+        pq = pos_q[:, None, :, None]
+        valid = jnp.broadcast_to(
+            kp <= pq, (b, full.k.shape[1], cch, full.k.shape[2]))
+        if spec.window > 0:
+            valid = valid & (kp > pq - spec.window)
+        from repro.kernels import ops as kops
+        o = kops.chunk_attention(q, full.k, full.v, valid, impl=spec.impl)
+        cache = {"full": full}
+    x = x + dense(o.reshape(b, cch, -1), p["wo"])
+    if cfg.layer_has_ffn(pos):
+        x = _ffn_apply(cfg, p, x)
+    return x, cache
+
+
 def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
                  length, do_select: bool, impl="ref", layout=None,
                  active=None, need_select=None):

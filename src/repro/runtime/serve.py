@@ -22,10 +22,11 @@ from repro.runtime import sharding as shardlib
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     capacity: int                 # max context tokens the cache holds
-    layout: str | None = None     # core/layouts registry name; None is a
-                                  # deprecated alias for "default" in the
-                                  # step builders (state_shardings keeps
-                                  # its batch-size auto rule for None)
+    layout: str = "default"       # core/layouts registry name; the
+                                  # legacy None/"auto" spellings resolve
+                                  # with a one-shot DeprecationWarning
+                                  # (state_shardings keeps its batch-size
+                                  # auto rule for an explicit None)
     impl: str = "ref"             # attention kernels: "ref" | "pallas"
                                   # (kernels/ops.py; baked into the
                                   # compiled steps, never a runtime switch)
@@ -79,6 +80,27 @@ def make_ragged_decode_step(cfg: ArchConfig, scfg: ServeConfig, *,
                                  impl=scfg.impl, layout=layout,
                                  active=active)
     return decode
+
+
+def make_prefill_chunk_step(cfg: ArchConfig, scfg: ServeConfig, *,
+                            chunk: int):
+    """Chunked-prefill half of the engine's mixed prefill+decode step.
+
+    Feeds each prefilling slot's next prompt chunk (≤ ``chunk`` tokens,
+    STATIC shape — the chunk-size bucket) directly into the slot's rows
+    of the batched sharded serve state through the layout protocol
+    (core/layouts.py ``prefill_chunk``). Per-slot chunk lengths and the
+    prefilling mask are dynamic, so one compiled program serves every
+    chunk schedule.
+    """
+    layout = _layout(scfg)
+
+    def chunk_step(params, state, tokens, chunk_len, active):
+        assert tokens.shape[1] == chunk, (tokens.shape, chunk)
+        return M.prefill_chunk(cfg, params, state, tokens,
+                               chunk_len=chunk_len, active=active,
+                               impl=scfg.impl, layout=layout)
+    return chunk_step
 
 
 def jit_serve_steps(cfg: ArchConfig, scfg: ServeConfig, mesh: Mesh, params,

@@ -145,6 +145,19 @@ def param_shardings(cfg, mesh: Mesh, params, mode: str = "train"):
         jax.tree_util.tree_structure(params), out)
 
 
+def replicated(mesh: Mesh):
+    """Fully-replicated NamedSharding on ``mesh``."""
+    return NamedSharding(mesh, P())
+
+
+def serve_step_out_shardings(mesh: Mesh, state_shardings):
+    """(logits, state) out_shardings pair for the serving engine's
+    decode and prefill-chunk jits: per-step logits replicated, the
+    batched serve state pinned to its layout placement — the sharded
+    half of the zero-recompile invariant (docs/serving.md)."""
+    return (replicated(mesh), state_shardings)
+
+
 def batch_sharding(mesh: Mesh, batch_size: int):
     """Sharding for (B, ...) input batches: B over (pod, data) if divisible."""
     ax = batch_axes(mesh)

@@ -15,6 +15,7 @@ from repro.sched.tiling import (  # noqa: F401
 from repro.sched.balance import (  # noqa: F401
     admission_score,
     balanced_loads,
+    chunk_allocation,
     device_page_loads,
     head_load,
     imbalance,

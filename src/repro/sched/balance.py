@@ -155,6 +155,55 @@ def device_page_loads(ctx_lengths: Sequence[int], *, n_shards: int,
     return loads
 
 
+def chunk_allocation(tokens_done: Sequence[int], tokens_left: Sequence[int],
+                     budget: int, *, n_shards: int,
+                     page_size: int) -> List[int]:
+    """Split one engine step's chunked-prefill token budget across the
+    prefilling slots (consumed by serving.Engine's mixed step).
+
+    ``tokens_done[i]`` is slot i's prompt tokens already fed,
+    ``tokens_left[i]`` the remainder; slots are given in FIFO (admission)
+    order. Grants are page-granular: each round gives one slot tokens up
+    to its next page boundary, choosing the slot whose page being
+    written lands on the least-loaded device under round-robin page →
+    device striping (seeded with the prefilling slots' resident pages;
+    FIFO order breaks ties). With ``n_shards == 1`` every device load is
+    equal, so the first unfinished slot wins each round — plain FIFO
+    fill. Returns the per-slot grant list (sums to
+    min(budget, sum(tokens_left))).
+    """
+    n = len(tokens_left)
+    assert len(tokens_done) == n
+    alloc = [0] * n
+    left = [int(t) for t in tokens_left]
+    done = [int(t) for t in tokens_done]
+    shards = max(int(n_shards), 1)
+    loads = [0] * shards
+    for t in done:  # resident pages of partially-fed slots
+        pages = -(-t // page_size) if t > 0 else 0
+        q, r = divmod(pages, shards)
+        for d in range(shards):
+            loads[d] += q + (1 if d < r else 0)
+    budget = int(budget)
+    while budget > 0 and any(l > 0 for l in left):
+        best = None
+        for i in range(n):
+            if left[i] <= 0:
+                continue
+            d = ((done[i] + alloc[i]) // page_size) % shards
+            if best is None or loads[d] < loads[best[1]]:
+                best = (i, d)
+        i, d = best
+        fed = done[i] + alloc[i]
+        if fed % page_size == 0:
+            loads[d] += 1          # this grant opens a page on device d
+        grant = min(left[i], budget, page_size - fed % page_size)
+        alloc[i] += grant
+        left[i] -= grant
+        budget -= grant
+    return alloc
+
+
 def load_imbalance(vals: Sequence[float]) -> float:
     """max/mean of raw load values (1.0 = perfectly balanced)."""
     vals = list(vals)

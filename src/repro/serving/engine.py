@@ -9,24 +9,37 @@ lockstep:
   * ``BatchState`` holds a **fixed max-batch** compiled decode shape:
     per-slot caches, a per-slot ``length`` (B,) vector threaded through
     cache appends / attention validity (core/cache.py,
-    core/hybrid_attention.py), a per-slot ``active`` mask, and a per-slot
-    share-window ``phase``.
-  * Admission = **prefill-then-pack**: an incoming request is prefilled
-    at batch 1 (compiled once per prompt bucket), then its serve state is
-    packed into a free slot of the batched state with a single donated
-    ``dynamic_update_slice`` tree op — a dynamic slot index, so admission
-    never recompiles.
+    core/hybrid_attention.py), a per-slot ``active`` mask, a per-slot
+    ``prefilling`` mask, and a per-slot share-window ``phase``.
+  * Admission comes in two modes. **Chunked** (``prefill_chunk=N``, the
+    production path): a request is admitted to a free slot IMMEDIATELY
+    in a ``PREFILLING`` phase — the slot's cache rows are cleared to the
+    empty sentinels by one donated dynamic-slot reset, and each engine
+    step feeds up to ``N`` prompt tokens (one STATIC chunk-size bucket,
+    per-slot lengths dynamic) **directly into the slot's rows of the
+    batched sharded state** through the layout protocol
+    (core/layouts.py ``prefill_chunk``), interleaved with the normal
+    ragged decode of every other slot. No decode slot ever stalls for a
+    prompt: time-to-first-token is bounded by ceil(S/N) engine steps
+    and inter-token latency by one chunk's compute, regardless of
+    prompt length. **Prefill-then-pack** (``prefill_chunk=None``): the
+    legacy monolithic admission — batch-1 prefill (one compile per
+    prompt bucket) packed into a free slot with a donated
+    ``dynamic_update_slice`` tree op; kept as the token-exactness
+    oracle chunked admission is tested against, and for recurrent
+    mixers (mamba2/xlstm) whose prefill cannot yet resume mid-prompt.
   * Retirement flips ``active`` off; the slot's caches stay bit-stable
-    (appends are masked) until the next admission overwrites them.
-  * Page selection refreshes on the shared share-window clock (global
-    step % w == 0, the paper's LServe-style shared selection) plus once
-    at each slot's first decode step (phase == 0), and the ``select``
-    variant applies the fresh selection **only** to slots whose refresh
-    is due (``need_select`` blending). A slot's refresh schedule is
-    therefore a function of its own admission step and the global clock
+    (appends are masked) until the next admission resets/overwrites
+    them.
+  * Page selection refreshes on each slot's OWN share-window cadence
+    (``phase % w == 0`` — so a slot always selects on its first decode
+    step), and the ``select`` variant applies the fresh selection
+    **only** to slots whose refresh is due (``need_select`` blending).
+    A slot's refresh schedule is therefore a function of its own phase
     alone — its decode logits are invariant to other slots joining or
-    leaving (the co-placement exactness argument applied to continuous
-    batching; tested in tests/test_serving.py).
+    leaving AND to how its own admission was scheduled (packed, or
+    chunked at any chunk size); the co-placement exactness argument
+    applied to continuous batching, tested in tests/test_serving.py.
   * The decode loop never blocks on the device: retirement is
     budget-driven, so generated tokens are left on device (one (B,)
     vector per step) and extracted once at the end of ``run()``
@@ -72,8 +85,11 @@ from repro.runtime import serve as serve_rt
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``prompt`` length must be one of the
-    engine's prompt buckets (pad upstream; the padded prompt is canonical)."""
+    """One generation request. Under packed admission
+    (``prefill_chunk=None``) the ``prompt`` length must be one of the
+    engine's prompt buckets (pad upstream; the padded prompt is
+    canonical). Chunked admission compiles per chunk bucket instead, so
+    any length in ``[1, capacity)`` is admissible unpadded."""
 
     uid: int
     prompt: np.ndarray          # (S,) int32
@@ -87,9 +103,12 @@ class Completion:
     tokens: List[int]            # filled by Engine.finalize()
     admitted_step: int
     finished_step: int = -1
+    first_token_step: int = -1    # EngineStats.engine_steps at first token
+    admitted_engine_step: int = -1  # EngineStats.engine_steps at admission
     # device-side bookkeeping until finalize():
     _first_tok: object = None    # device scalar from the prefill logits
     _slot: int = -1
+    _seq: int = -1               # admission sequence (FIFO chunk order)
     _step_idx: List[int] = dataclasses.field(default_factory=list)
 
 
@@ -98,11 +117,20 @@ class EngineStats:
     decode_steps: int = 0
     select_steps: int = 0
     reuse_steps: int = 0
-    prefills: int = 0
+    engine_steps: int = 0        # step() calls that dispatched anything
+    admissions: int = 0          # requests admitted into a slot
+    prefill_chunks: int = 0      # chunked-prefill dispatches (mixed steps)
     tokens_out: int = 0
     occupancy_sum: float = 0.0   # sum over steps of live-slot fraction
     wall_s: float = 0.0          # set by run()
     admission_reorders: int = 0  # balanced admission: non-FIFO picks
+
+    @property
+    def prefills(self) -> int:
+        """Deprecated pre-chunking name: the old counter conflated
+        compiles, admissions, and (now) chunks — read ``admissions``
+        and ``prefill_chunks`` instead."""
+        return self.admissions
 
     @property
     def occupancy(self) -> float:
@@ -119,22 +147,27 @@ class BatchState:
 
     ``serve`` is the device pytree (per-slot caches + (B,) length);
     the numpy arrays mirror per-slot scheduling metadata the host loop
-    needs without device round-trips.
+    needs without device round-trips. A slot is in exactly one of three
+    phases: FREE (neither mask set), PREFILLING (``prefilling``; length
+    counts prompt tokens fed so far), or DECODING (``active``).
     """
 
     serve: dict                  # model serve state, length: (B,) int32
-    active: np.ndarray           # (B,) bool
+    active: np.ndarray           # (B,) bool — decoding slots
+    prefilling: np.ndarray       # (B,) bool — chunked-prefill slots
     lengths: np.ndarray          # (B,) int64 — host mirror of serve length
     phase: np.ndarray            # (B,) int64 — decode steps since admission
     uid: np.ndarray              # (B,) int64 — -1 when free
     remaining: np.ndarray        # (B,) int64 — generation budget left
+    prompt_left: np.ndarray      # (B,) int64 — prompt tokens not yet fed
 
     @property
     def max_batch(self) -> int:
         return self.active.shape[0]
 
     def free_slots(self) -> List[int]:
-        return [i for i in range(self.max_batch) if not self.active[i]]
+        return [i for i in range(self.max_batch)
+                if not self.active[i] and not self.prefilling[i]]
 
 
 def jit_cache_size(fn) -> int:
@@ -165,6 +198,31 @@ def _pack_slot(big: dict, small: dict, slot):
     return jax.tree_util.tree_map_with_path(upd, big, small)
 
 
+def _reset_slot(big: dict, slot):
+    """Clear slot ``slot`` of the batched serve state to the EMPTY-cache
+    sentinels (±inf page metadata, -1 page_start / ring positions, zeros
+    elsewhere, length 0) — the state a fresh PagedCache/StreamCache
+    constructor produces. Chunked admission starts from this clean row so
+    no stale token of a previous occupant can pass a validity mask and
+    the incremental chunk-append min/max metadata merge is exact. Slot
+    index is dynamic — one compile total, mirroring ``_pack_slot``.
+    """
+    from repro.core import cache as cachelib
+
+    def upd(path, bg):
+        ps = jax.tree_util.keystr(path)
+        if ps.endswith("['length']"):
+            return jax.lax.dynamic_update_slice(
+                bg, jnp.zeros((1,), bg.dtype), (slot,))
+        axis = 1 if "['blocks']" in ps else 0
+        row_shape = bg.shape[:axis] + (1,) + bg.shape[axis + 1:]
+        row = jnp.full(row_shape, cachelib.empty_fill_value(ps), bg.dtype)
+        start = (0,) * axis + (slot,) + (0,) * (bg.ndim - axis - 1)
+        return jax.lax.dynamic_update_slice(bg, row, start)
+
+    return jax.tree_util.tree_map_with_path(upd, big)
+
+
 class Engine:
     """Continuous-batching engine. See module docstring.
 
@@ -173,7 +231,22 @@ class Engine:
     cfg, params : model config + parameters.
     max_batch   : number of slots (the compiled decode batch).
     capacity    : max context tokens any slot may reach (cache size).
-    prompt_buckets : allowed prompt lengths; one prefill compile each.
+    prompt_buckets : allowed prompt lengths; one prefill compile each
+                  (packed mode). Chunked mode compiles per CHUNK bucket,
+                  not per prompt bucket, so any prompt length below
+                  capacity is admissible — the buckets then only size
+                  the state-shape probe and remain the benchmark's
+                  workload vocabulary.
+    prefill_chunk : per-step chunked-prefill token budget (the static
+                  chunk-size bucket). None (default) = legacy
+                  prefill-then-pack admission. With an int N, admission
+                  is immediate (PREFILLING phase) and each engine step
+                  feeds at most N prompt tokens across the prefilling
+                  slots, interleaved with the decode of every other
+                  slot — bounded time-to-first-token and no decode
+                  stall on long prompts. Requires attention-only mixers
+                  and token prompts (recurrent mixers / frontend-stub
+                  archs keep packed admission).
     impl        : attention kernel implementation, ``"ref"`` (pure-jnp
                   oracle) or ``"pallas"`` (Pallas kernels; interpret mode
                   off-TPU). Validated and BAKED INTO the compiled step
@@ -203,12 +276,14 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
                  capacity: int, prompt_buckets: Sequence[int],
-                 impl: str = "ref", layout: Optional[str] = None,
+                 impl: str = "ref", layout: Optional[str] = "default",
                  mesh=None, admission: str = "fifo",
                  admit_lookahead: int = 4,
-                 balance_shards: Optional[int] = None):
+                 balance_shards: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
+        from repro.configs.base import MIXER_ATTENTION
 
         self.cfg = cfg
         self.params = params
@@ -235,6 +310,20 @@ class Engine:
         assert self.prompt_buckets[-1] < self.capacity, (
             f"largest prompt bucket {self.prompt_buckets[-1]} must leave "
             f"room to decode within capacity {self.capacity}")
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
+        if self.prefill_chunk is not None:
+            assert self.prefill_chunk >= 1, prefill_chunk
+            if cfg.embed_frontend_stub:
+                raise ValueError(
+                    "chunked prefill feeds token chunks through the "
+                    "embedding; frontend-stub archs (vlm/audio) need "
+                    "prefill_chunk=None (prefill-then-pack)")
+            mixers = {cfg.mixer_for_layer(i) for i in range(cfg.num_layers)}
+            if mixers != {MIXER_ATTENTION}:
+                raise ValueError(
+                    f"chunked prefill supports attention mixers only "
+                    f"(got {sorted(mixers)}); recurrent mixers need "
+                    f"prefill_chunk=None (prefill-then-pack)")
         self.share_window = max(cfg.h2eal.share_window, 1)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
                                     layout=self.layout, impl=self.attn_impl)
@@ -245,15 +334,17 @@ class Engine:
         # reshards it (unsharded zeros in, sharded layout out) and
         # pack/decode each compile a second entry AFTER warmup. Pinning
         # out_shardings keeps every steady-state call on a single
-        # compiled program.
+        # compiled program — for the chunk/reset admission ops too.
         dec_shard = {}
+        reset_shard = {}
         if self.plan.shard_state:
-            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.runtime import sharding as shardlib
             ss = self.plan.state_shardings(cfg, self.batch.serve,
                                            batch_size=max_batch)
-            rep = NamedSharding(self.mesh, PartitionSpec())
             self.batch.serve = jax.device_put(self.batch.serve, ss)
-            dec_shard = {"out_shardings": (rep, ss)}
+            dec_shard = {"out_shardings":
+                         shardlib.serve_step_out_shardings(self.mesh, ss)}
+            reset_shard = {"out_shardings": ss}
             self._pack = jax.jit(_pack_slot, donate_argnums=(0,),
                                  out_shardings=ss)
         else:
@@ -264,10 +355,23 @@ class Engine:
         self._dec_reuse = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=False),
             donate_argnums=(1,), **dec_shard)
+        if self.prefill_chunk is not None:
+            self._chunk = jax.jit(
+                serve_rt.make_prefill_chunk_step(
+                    cfg, scfg, chunk=self.prefill_chunk),
+                donate_argnums=(1,), **dec_shard)
+            self._reset = jax.jit(_reset_slot, donate_argnums=(0,),
+                                  **reset_shard)
         self._tok = jnp.zeros((max_batch,), jnp.int32)   # next-token feed
         self._act_dev = jnp.zeros((max_batch,), bool)    # device active mask
-        self._act_dirty = False
+        self._act_mirror = np.zeros((max_batch,), bool)  # host copy of it
         self._trace: List[jax.Array] = []                # (B,) per step
+        # engine-step index of each trace row: lets a latency harness map
+        # token emissions (Completion._step_idx trace rows) to per-step
+        # wall-clock timestamps (benchmarks/serve_throughput.py --arrival)
+        self.trace_engine_steps: List[int] = []
+        self._prompts: Dict[int, np.ndarray] = {}        # slot -> prompt
+        self._admit_seq = 0                              # FIFO chunk order
         self._queue: deque[Request] = deque()
         self._live: Dict[int, Completion] = {}       # slot -> in-flight
         self.completions: Dict[int, Completion] = {}  # uid -> finished
@@ -302,10 +406,12 @@ class Engine:
         return BatchState(
             serve=serve,
             active=np.zeros((max_batch,), bool),
+            prefilling=np.zeros((max_batch,), bool),
             lengths=np.zeros((max_batch,), np.int64),
             phase=np.zeros((max_batch,), np.int64),
             uid=np.full((max_batch,), -1, np.int64),
             remaining=np.zeros((max_batch,), np.int64),
+            prompt_left=np.zeros((max_batch,), np.int64),
         )
 
     # ------------------------------------------------------------------
@@ -313,47 +419,99 @@ class Engine:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request):
-        if len(req.prompt) not in self.prompt_buckets:
+        if self.prefill_chunk is None:
+            if len(req.prompt) not in self.prompt_buckets:
+                raise ValueError(
+                    f"prompt length {len(req.prompt)} not in buckets "
+                    f"{self.prompt_buckets}; pad upstream")
+        elif not 1 <= len(req.prompt) < self.capacity:
+            # chunked admission compiles per CHUNK bucket, so any prompt
+            # that leaves room to decode is admissible without padding
             raise ValueError(
-                f"prompt length {len(req.prompt)} not in buckets "
-                f"{self.prompt_buckets}; pad upstream")
+                f"prompt length {len(req.prompt)} must be in "
+                f"[1, capacity={self.capacity})")
         if req.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {req.max_new} "
                              f"(every admitted request emits at least the "
                              f"prefill token)")
         self._queue.append(req)
 
+    def _new_completion(self, req: Request, slot: int) -> Completion:
+        comp = Completion(uid=req.uid, prompt_len=len(req.prompt),
+                          tokens=[],
+                          admitted_step=self.stats.decode_steps)
+        comp.admitted_engine_step = self.stats.engine_steps
+        comp._slot = slot
+        comp._seq = self._admit_seq
+        self._admit_seq += 1
+        self._live[slot] = comp
+        self.stats.admissions += 1
+        return comp
+
     def _admit_one(self, req: Request, slot: int):
+        """Packed admission: batch-1 prefill + pack; the slot decodes
+        from the next step and its first token is already emitted."""
         prompt = jnp.asarray(np.asarray(req.prompt)[None])  # (1, S)
         with self._mesh_ctx():
             logits, small = self._prefill(self.params, prompt)
-            self.stats.prefills += 1
             self.batch.serve = self._pack(self.batch.serve, small,
                                           jnp.int32(slot))
         first = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         self._tok = self._tok.at[slot].set(first)
         b = self.batch
         b.active[slot] = True
-        self._act_dirty = True
         b.lengths[slot] = len(req.prompt)
         b.phase[slot] = 0          # select on the slot's first decode step
         b.uid[slot] = req.uid
-        comp = Completion(uid=req.uid, prompt_len=len(req.prompt),
-                          tokens=[],
-                          admitted_step=self.stats.decode_steps)
+        comp = self._new_completion(req, slot)
         comp._first_tok = first
-        comp._slot = slot
-        self._live[slot] = comp
+        # packed admission runs between engine steps: the prefill that
+        # produced this token completes with the NEXT step's device work
+        # (latency harnesses map first_token_step to per-step wall time)
+        comp.first_token_step = self.stats.engine_steps + 1
         self.stats.tokens_out += 1
         b.remaining[slot] = req.max_new - 1
         # next append writes at position lengths[slot]; valid while < capacity
         if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
             self._retire(slot)
 
+    def _admit_one_chunked(self, req: Request, slot: int):
+        """Chunked admission: the slot enters the PREFILLING phase
+        immediately; its cache rows are cleared to the empty sentinels
+        and subsequent engine steps feed the prompt chunk by chunk."""
+        b = self.batch
+        with self._mesh_ctx():
+            b.serve = self._reset(b.serve, jnp.int32(slot))
+        b.prefilling[slot] = True
+        b.lengths[slot] = 0
+        b.phase[slot] = 0
+        b.uid[slot] = req.uid
+        b.remaining[slot] = req.max_new
+        b.prompt_left[slot] = len(req.prompt)
+        self._prompts[slot] = np.asarray(req.prompt, np.int32)
+        self._new_completion(req, slot)
+
+    def _finish_prefill(self, slot: int, chunk_logits):
+        """The chunk that just ran completed this slot's prompt: emit the
+        first token from its logits row and flip the slot to DECODING."""
+        b = self.batch
+        b.prefilling[slot] = False
+        first = jnp.argmax(chunk_logits[slot], axis=-1).astype(jnp.int32)
+        self._tok = self._tok.at[slot].set(first)
+        b.active[slot] = True
+        b.phase[slot] = 0          # select on the slot's first decode step
+        comp = self._live[slot]
+        comp._first_tok = first
+        comp.first_token_step = self.stats.engine_steps
+        self._prompts.pop(slot, None)
+        self.stats.tokens_out += 1
+        b.remaining[slot] -= 1
+        if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
+            self._retire(slot)
+
     def _retire(self, slot: int):
         b = self.batch
         b.active[slot] = False
-        self._act_dirty = True
         b.uid[slot] = -1
         b.remaining[slot] = 0
         comp = self._live.pop(slot)
@@ -371,7 +529,14 @@ class Engine:
                 or len(self._queue) <= 1):
             return self._queue.popleft()
         from repro.sched import balance
-        live = [int(c) for c in self.batch.lengths[self.batch.active]]
+        b = self.batch
+        # score prefilling slots at the page load they WILL reach (fed
+        # tokens + prompt still to come), not the fed count alone — a
+        # freshly chunk-admitted long prompt shows length 0 but will
+        # occupy its full page span within ceil(S/chunk) steps
+        live = [int(b.lengths[i]) + int(b.prompt_left[i])
+                for i in range(b.max_batch)
+                if b.active[i] or b.prefilling[i]]
         best_i, best_s = 0, None
         for i in range(min(self.admit_lookahead, len(self._queue))):
             s = balance.admission_score(
@@ -387,41 +552,109 @@ class Engine:
         return req
 
     def _admit(self):
+        admit = (self._admit_one if self.prefill_chunk is None
+                 else self._admit_one_chunked)
         for slot in self.batch.free_slots():
             if not self._queue:
                 break
-            self._admit_one(self._pick_request(), slot)
+            admit(self._pick_request(), slot)
 
     # ------------------------------------------------------------------
-    # decode loop
+    # the mixed prefill+decode step
     # ------------------------------------------------------------------
+
+    def _schedule_chunks(self):
+        """Distribute this step's chunk budget over the prefilling slots.
+
+        Returns (tokens (B, C) int32, chunk_len (B,) int32) or None when
+        nothing is prefilling. FIFO by admission order; under
+        ``admission="balanced"`` the split is page-granular and
+        device-load aware (sched/balance.chunk_allocation scores which
+        slot's next page lands on the least-loaded shard).
+        """
+        b = self.batch
+        slots = [i for i in range(b.max_batch) if b.prefilling[i]]
+        if not slots:
+            return None
+        from repro.sched import balance
+        slots.sort(key=lambda i: self._live[i]._seq)
+        n_shards = (self.balance_shards or self.plan.balance_shards
+                    if self.admission == "balanced" else 1)
+        alloc = balance.chunk_allocation(
+            [int(b.lengths[i]) for i in slots],
+            [int(b.prompt_left[i]) for i in slots],
+            self.prefill_chunk, n_shards=max(n_shards, 1),
+            page_size=self.cfg.h2eal.page_size)
+        tokens = np.zeros((b.max_batch, self.prefill_chunk), np.int32)
+        clens = np.zeros((b.max_batch,), np.int32)
+        for i, n in zip(slots, alloc):
+            if n <= 0:
+                continue
+            fed = int(b.lengths[i])
+            tokens[i, :n] = self._prompts[i][fed:fed + n]
+            clens[i] = n
+        return tokens, clens
 
     def step(self):
-        """One batched decode step over the live slots (non-blocking)."""
+        """One engine step (non-blocking): feed a prompt chunk to the
+        prefilling slots AND run one batched ragged decode over the
+        decoding slots — the mixed prefill+decode step. A slot whose
+        prompt completes this step emits its first token from the chunk
+        logits and starts decoding next step."""
         b = self.batch
+        chunk_work = (self._schedule_chunks()
+                      if self.prefill_chunk is not None else None)
         active = b.active.copy()
-        if not active.any():
+        if chunk_work is None and not active.any():
             return
-        step_idx = self.stats.decode_steps
-        # selection refresh: shared clock + each slot's first decode step
-        need = active & ((b.phase == 0)
-                         | (step_idx % self.share_window == 0))
-        if self._act_dirty:
-            self._act_dev = jnp.asarray(active)
-            self._act_dirty = False
-        act_dev = self._act_dev
+        self.stats.engine_steps += 1
         with self._mesh_ctx():
-            if need.any():
-                logits, b.serve = self._dec_sel(
-                    self.params, b.serve, self._tok, act_dev,
-                    jnp.asarray(need))
-                self.stats.select_steps += 1
-            else:
-                logits, b.serve = self._dec_reuse(
-                    self.params, b.serve, self._tok, act_dev)
-                self.stats.reuse_steps += 1
-        self._tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if chunk_work is not None:
+                toks, clens = chunk_work
+                logits_c, b.serve = self._chunk(
+                    self.params, b.serve, jnp.asarray(toks),
+                    jnp.asarray(clens), jnp.asarray(clens > 0))
+                self.stats.prefill_chunks += 1
+                for slot in np.nonzero(clens)[0]:
+                    slot = int(slot)
+                    b.lengths[slot] += int(clens[slot])
+                    b.prompt_left[slot] -= int(clens[slot])
+                    if b.prompt_left[slot] == 0:
+                        self._finish_prefill(slot, logits_c)
+            if active.any():
+                self._decode_once(active)
+
+    def _decode_once(self, active: np.ndarray):
+        """The decode half of a step, over the captured ``active`` mask
+        (slots that finished prefilling THIS step start next step)."""
+        b = self.batch
+        step_idx = self.stats.decode_steps
+        # selection refresh: each slot's own share-window cadence (so a
+        # slot's schedule is independent of the global clock, other
+        # slots, and how its admission was chunked)
+        need = active & (b.phase % self.share_window == 0)
+        if not np.array_equal(self._act_mirror, active):
+            self._act_dev = jnp.asarray(active)
+            self._act_mirror = active.copy()
+        act_dev = self._act_dev
+        if need.any():
+            logits, b.serve = self._dec_sel(
+                self.params, b.serve, self._tok, act_dev,
+                jnp.asarray(need))
+            self.stats.select_steps += 1
+        else:
+            logits, b.serve = self._dec_reuse(
+                self.params, b.serve, self._tok, act_dev)
+            self.stats.reuse_steps += 1
+        # keep non-active rows of the token feed: a slot that finished
+        # prefilling THIS step already holds its first token, which this
+        # dispatch (captured mask without it) must not clobber with the
+        # argmax of an inactive row's garbage logits
+        self._tok = jnp.where(act_dev,
+                              jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                              self._tok)
         self._trace.append(self._tok)
+        self.trace_engine_steps.append(self.stats.engine_steps)
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(active.mean())
         for slot in np.nonzero(active)[0]:
@@ -443,21 +676,48 @@ class Engine:
             trace = np.zeros((0, self.batch.max_batch), np.int32)
         for comp in list(self.completions.values()) + list(
                 self._live.values()):
-            if comp.tokens:
-                continue  # already materialized
+            if comp.tokens or comp._first_tok is None:
+                continue  # already materialized / still prefilling
             toks = [int(np.asarray(comp._first_tok))]
             toks.extend(int(trace[t, comp._slot]) for t in comp._step_idx)
             comp.tokens = toks
 
+    def busy(self) -> bool:
+        """True while any work is pending: queued requests, prefilling
+        slots, or decoding slots."""
+        return (bool(self._queue) or bool(self.batch.active.any())
+                or bool(self.batch.prefilling.any()))
+
+    def poll(self) -> bool:
+        """Admit whatever fits, then run one engine step — the unit of
+        the ``run()`` drain loop, public so external drivers (arrival
+        simulators, latency harnesses) need not reach into the
+        internals. Returns True if the step dispatched any work."""
+        before = self.stats.engine_steps
+        self._admit()
+        self.step()
+        return self.stats.engine_steps > before
+
+    def sync(self):
+        """Block until the device has caught up with the dispatched
+        steps (latency harnesses call this per step for honest
+        timestamps; the throughput path never does)."""
+        jax.block_until_ready(self._tok)
+
+    def token_engine_steps(self, comp: Completion) -> List[int]:
+        """Engine-step index at which each of ``comp``'s post-first
+        tokens was emitted (pairs with ``Completion.first_token_step``
+        for per-token latency accounting)."""
+        return [self.trace_engine_steps[r] for r in comp._step_idx]
+
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> Dict[int, Completion]:
-        """Drain: admit + decode until queue and slots are empty."""
+        """Drain: admit + step until queue and slots are empty."""
         for r in requests or ():
             self.submit(r)
         t0 = time.time()
-        while self._queue or self.batch.active.any():
-            self._admit()
-            self.step()
+        while self.busy():
+            self.poll()
         jax.block_until_ready(self.batch.serve["length"])
         self.stats.wall_s += time.time() - t0
         self.finalize()
@@ -470,6 +730,7 @@ class Engine:
             "reset_metrics() requires an idle engine")
         self.finalize()           # materialize anything still deferred
         self._trace.clear()
+        self.trace_engine_steps.clear()
         self.completions = {}
         self.stats = EngineStats()
 
@@ -482,9 +743,13 @@ class Engine:
         return self.batch.lengths[self.batch.active].copy()
 
     def jit_cache_sizes(self) -> Dict[str, int]:
-        return {
+        sizes = {
             "prefill": jit_cache_size(self._prefill),
             "decode_select": jit_cache_size(self._dec_sel),
             "decode_reuse": jit_cache_size(self._dec_reuse),
             "pack": jit_cache_size(self._pack),
         }
+        if self.prefill_chunk is not None:
+            sizes["prefill_chunk"] = jit_cache_size(self._chunk)
+            sizes["reset"] = jit_cache_size(self._reset)
+        return sizes

@@ -45,6 +45,38 @@ def test_registry_resolution():
         layoutlib.get_layout("bogus")
 
 
+def test_layout_alias_deprecation_warns_once():
+    """The pre-registry spellings None/"auto" resolve with a one-shot
+    DeprecationWarning per spelling (mirroring kernels/ops impl="kernel");
+    canonical names resolve silently."""
+    import warnings
+
+    layoutlib._warned_aliases.clear()
+    try:
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            assert layoutlib.resolve_layout(None) == "default"
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            assert layoutlib.resolve_layout("auto") == "default"
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            # second resolution of each alias is silent (warns once)
+            assert layoutlib.resolve_layout(None) == "default"
+            assert layoutlib.resolve_layout("auto") == "default"
+            # canonical names never warn
+            for name in layoutlib.available_layouts():
+                assert layoutlib.resolve_layout(name) == name
+            # the internal (model-layer) lookup never warns at all
+            layoutlib._warned_aliases.clear()
+            assert layoutlib.get_layout(None).name == "default"
+    finally:
+        # leave the one-shot set consumed so later tests that pass the
+        # aliases internally stay quiet regardless of ordering
+        layoutlib._warned_aliases.update(_ALIAS_KEYS)
+
+
+_ALIAS_KEYS = (None, "auto")
+
+
 def test_register_custom_layout():
     """A new entry is one register_layout() call away (and is listed)."""
 
@@ -195,4 +227,27 @@ def test_layout_conformance(model, default_trace, name):
                             max_new=reqs[0].max_new)])
     assert solo[100].tokens == solo_ref, name          # vs default
     assert solo[100].tokens == mixed_ref[0], name      # churn invariance
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_chunked(model, default_trace, name):
+    """Chunked-prefill conformance, for free per registry entry: the
+    engine with ``prefill_chunk`` set streams prompts into the layout's
+    caches through its ``prefill_chunk`` hook and must reproduce the
+    default-layout prefill-then-pack token trace for the same admission
+    trace, with zero post-warmup recompiles. Future layouts inherit this
+    sweep the moment they register."""
+    cfg, params = model
+    _, mixed_ref, _ = default_trace
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name, prefill_chunk=5)
+    mixed = eng.run(_mixed_workload(cfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    assert eng.stats.prefill_chunks > 0
+    sizes0 = eng.jit_cache_sizes()
+    eng.reset_metrics()
+    eng.run(_mixed_workload(cfg, seed=11, n=2))
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles

@@ -56,7 +56,9 @@ def test_admission_retirement_lifecycle(model):
         assert c.finished_step >= c.admitted_step
     assert not eng.batch.active.any()
     assert (eng.batch.uid == -1).all()
-    assert eng.stats.prefills == 5
+    assert eng.stats.admissions == 5
+    assert eng.stats.prefill_chunks == 0      # packed admission
+    assert eng.stats.prefills == 5            # deprecated alias
     # 5 admissions into 2 slots share ONE compile of each decode variant
     sizes = eng.jit_cache_sizes()
     for k in ("decode_select", "decode_reuse", "pack"):
@@ -197,7 +199,7 @@ def test_engine_coplace_shmap_matches_default(model):
     assert sorted(c0) == sorted(c1)
     for uid in sorted(c0):
         assert c0[uid].tokens == c1[uid].tokens, uid
-    assert eng1.stats.prefills == len(c1)
+    assert eng1.stats.admissions == len(c1)
 
 
 def test_engine_attn_impl_pallas_matches_ref(model):
@@ -370,6 +372,218 @@ def test_engine_coplace_shmap_pallas_exact_8dev():
                          timeout=520, cwd=REPO)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "PALLAS_ENGINE_EXACT" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Chunked (slot-resident) prefill — ISSUE 5
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_packed_with_churn(model):
+    """Chunked admission is token-exact vs prefill-then-pack for the same
+    admission trace, across chunk sizes, prompt lengths, and slot churn
+    (off argmax ties; EXPERIMENTS.md §Serving experiments). Also pins the
+    zero-recompile invariant: one compiled chunk program serves every
+    chunk schedule, including prompt lengths outside the buckets."""
+    cfg, params = model
+    eng0 = Engine(cfg, params, max_batch=2, capacity=CAP,
+                  prompt_buckets=[16, 24])
+    ref = {u: c.tokens for u, c in eng0.run(_mixed_workload(cfg)).items()}
+    for chunk in (3, 8, 64):
+        eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                     prompt_buckets=[16, 24], prefill_chunk=chunk)
+        got = eng.run(_mixed_workload(cfg))
+        assert sorted(got) == sorted(ref), chunk
+        for uid in sorted(ref):
+            assert got[uid].tokens == ref[uid], (chunk, uid)
+        assert eng.stats.admissions == len(ref)
+        assert eng.stats.prefill_chunks > 0
+        sizes0 = eng.jit_cache_sizes()
+        assert sizes0["prefill_chunk"] in (-1, 1)
+        assert sizes0["prefill"] in (-1, 0)       # pack path never used
+        # non-bucket prompt lengths reuse the same compiled chunk fn
+        eng.reset_metrics()
+        rng = np.random.default_rng(chunk)
+        eng.run([Request(uid=90 + i, prompt=_prompt(cfg, 5 + 7 * i, i),
+                         max_new=2 + i) for i in range(3)])
+        assert eng.jit_cache_sizes() == sizes0, chunk
+
+
+def test_chunked_prefill_property_chunk_x_prompt(model):
+    """Hypothesis-compat property: for any chunk size and prompt length,
+    feeding the prompt through M.prefill_chunk (against a reset slot of
+    the batched state) reproduces the single-shot M.prefill: same greedy
+    first token, logits to float tolerance, and identical KV caches up
+    to reassociation-level float error."""
+    from tests._hypothesis_compat import given, settings, st
+
+    cfg, params = model
+    from repro.runtime import serve as serve_rt
+    from repro.serving.engine import _reset_slot
+
+    scfg = serve_rt.ServeConfig(capacity=CAP)
+    prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
+
+    @settings(max_examples=5)
+    @given(chunk=st.integers(min_value=1, max_value=40),
+           plen=st.integers(min_value=4, max_value=30))
+    def check(chunk, plen):
+        prompt = _prompt(cfg, plen, seed=chunk * 100 + plen)
+        logits1, packed = prefill(params, jnp.asarray(prompt)[None])
+        # empty batch-1 state with the reset sentinels, grown chunk-wise
+        shapes = jax.eval_shape(prefill, params, prompt[None])[1]
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        state["length"] = jnp.zeros((1,), jnp.int32)
+        state = _reset_slot(state, jnp.int32(0))
+        step = jax.jit(serve_rt.make_prefill_chunk_step(cfg, scfg,
+                                                        chunk=chunk))
+        logits2 = None
+        for lo in range(0, plen, chunk):
+            n = min(chunk, plen - lo)
+            toks = np.zeros((1, chunk), np.int32)
+            toks[0, :n] = prompt[lo:lo + n]
+            logits2, state = step(params, state, jnp.asarray(toks),
+                                  jnp.asarray([n], np.int32),
+                                  jnp.asarray([True]))
+        assert int(state["length"][0]) == plen
+        np.testing.assert_allclose(np.asarray(logits2[0]),
+                                   np.asarray(logits1[0]),
+                                   rtol=2e-4, atol=2e-4)
+        assert int(jnp.argmax(logits2[0])) == int(jnp.argmax(logits1[0]))
+        # cache equivalence: packed state is scalar-length batch-1; the
+        # chunked state must hold the same KV (float tolerance), same
+        # page bookkeeping, and the same stream ring occupancy
+        import jax.tree_util as jtu
+        flat1 = jtu.tree_flatten_with_path(packed)[0]
+        flat2 = jtu.tree_flatten_with_path(state)[0]
+        for (p1, a), (p2, b) in zip(flat1, flat2):
+            ps = jtu.keystr(p1)
+            assert ps == jtu.keystr(p2)
+            if "length" in ps or "sel_idx" in ps or "importance" in ps:
+                continue
+            a, b = np.asarray(a), np.asarray(b)
+            if a.dtype.kind == "f":
+                fin = np.isfinite(a)
+                assert (fin == np.isfinite(b)).all(), ps
+                np.testing.assert_allclose(b[fin], a[fin], rtol=2e-4,
+                                           atol=2e-4, err_msg=ps)
+            else:
+                np.testing.assert_array_equal(a, b, err_msg=ps)
+
+    check()
+
+
+def test_chunked_decode_continues_during_long_prefill(model):
+    """The no-head-of-line acceptance property, step-exact: while a
+    max-bucket prompt chunk-prefills over several engine steps, a
+    concurrently decoding slot emits one token per engine step. Under
+    prefill-then-pack the same admission is atomic — zero tokens emitted
+    between the long request's admission and its first token."""
+    cfg, params = model
+
+    def serve(prefill_chunk):
+        eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                     prompt_buckets=[16, 24],
+                     prefill_chunk=prefill_chunk)
+        eng.submit(Request(uid=0, prompt=_prompt(cfg, 16, 1), max_new=30))
+        steps = 0
+        while eng.busy():
+            if steps == 2:   # long prompt arrives while uid 0 decodes
+                eng.submit(Request(uid=1, prompt=_prompt(cfg, 24, 2),
+                                   max_new=3))
+            eng.poll()
+            steps += 1
+        eng.finalize()
+        long_c = eng.completions[1]
+        other = eng.completions[0]
+        during = sum(
+            1 for es in eng.token_engine_steps(other)
+            if long_c.admitted_engine_step < es < long_c.first_token_step)
+        return eng, during
+
+    eng_c, during_c = serve(prefill_chunk=6)
+    eng_p, during_p = serve(prefill_chunk=None)
+    # chunked: ceil(24/6) = 4 chunk steps; decode ran in every one of the
+    # strictly-between steps. packed: admission is atomic — none.
+    assert during_c >= 2, during_c
+    assert during_p == 0, during_p
+    assert eng_c.completions[1].tokens == eng_p.completions[1].tokens
+    assert eng_c.completions[0].tokens == eng_p.completions[0].tokens
+    assert eng_c.stats.prefill_chunks >= 4
+
+
+def test_chunked_prefill_validation(model):
+    """Chunked mode rejects what it cannot serve, at construction or
+    submit time: recurrent mixers, frontend-stub archs, and prompts that
+    leave no room to decode. Bucket membership is NOT required (chunk
+    compiles are per chunk bucket, not per prompt bucket)."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=1, capacity=CAP,
+                 prompt_buckets=[16], prefill_chunk=4)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(Request(uid=0, prompt=_prompt(cfg, CAP, 0), max_new=1))
+    comps = eng.run([Request(uid=1, prompt=_prompt(cfg, 13, 1), max_new=2)])
+    assert len(comps[1].tokens) == 2          # non-bucket length is fine
+
+    zcfg = reduced(get_arch("zamba2-2.7b"))   # mamba2 mixers
+    zparams = M.init_params(zcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention mixers"):
+        Engine(zcfg, zparams, max_batch=1, capacity=CAP,
+               prompt_buckets=[16], prefill_chunk=4)
+    # packed admission for the same arch still constructs
+    Engine(zcfg, zparams, max_batch=1, capacity=CAP, prompt_buckets=[16])
+
+
+CHUNKED_ENGINE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from tests.test_serving import CAP, _mixed_workload
+from repro.serving import Engine
+
+cfg = reduced(get_arch("smollm-360m"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+eng0 = Engine(cfg, params, max_batch=2, capacity=CAP,
+              prompt_buckets=[16, 24])
+c0 = eng0.run(_mixed_workload(cfg))
+for layout in ("coplace_shmap", "interleave"):
+    eng1 = Engine(cfg, params, max_batch=2, capacity=CAP,
+                  prompt_buckets=[16, 24], layout=layout,
+                  admission="balanced", prefill_chunk=7)
+    c1 = eng1.run(_mixed_workload(cfg))
+    assert sorted(c0) == sorted(c1), layout
+    for uid in sorted(c0):
+        assert c0[uid].tokens == c1[uid].tokens, (
+            layout, uid, c0[uid].tokens, c1[uid].tokens)
+    assert eng1.stats.prefill_chunks > 0
+    # zero post-warmup recompiles across mixed prefill+decode steps
+    sizes0 = eng1.jit_cache_sizes()
+    eng1.reset_metrics()
+    eng1.run(_mixed_workload(cfg, seed=5, n=4))
+    assert eng1.jit_cache_sizes() == sizes0, (
+        layout, sizes0, eng1.jit_cache_sizes())
+    print("CHUNKED_ENGINE_EXACT", layout)
+"""
+
+
+@pytest.mark.slow
+def test_engine_chunked_sharded_exact_8dev():
+    """8-fake-device subprocess (the ISSUE-5 acceptance check): chunked
+    slot-resident prefill under BOTH sharded layouts (coplace_shmap
+    shard_map co-placement and GSPMD interleave) is token-exact vs the
+    default-layout prefill-then-pack engine for the same admission
+    trace, with zero post-warmup recompiles across mixed prefill+decode
+    steps — the prompt KV streams directly into the sharded paged cache
+    through the layout protocol."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", CHUNKED_ENGINE_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=520, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert out.stdout.count("CHUNKED_ENGINE_EXACT") == 2
 
 
 def test_balanced_admission_reorders(model):
