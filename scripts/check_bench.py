@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Perf gate over the BENCH_serve.json artifact.
+
+scripts/ci.sh produces BENCH_serve.json (benchmarks/serve_throughput.py)
+on every full run; this script holds it against the committed bands in
+benchmarks/bench_bands.json so perf and correctness drift fail CI
+instead of silently rewriting the artifact:
+
+  exact checks (deterministic on any host)
+    - every banded row is present (coverage: a row disappearing from the
+      benchmark is a failure, not a skip)
+    - recompiled_after_warmup is False on every engine row
+    - tokens_match_packed / tokens_match_ref are True wherever emitted
+      (chunked admission vs prefill-then-pack; pallas vs ref)
+
+  banded checks (wall-clock metrics; wide multiplicative bands because
+  CI hosts are contended CPUs running interpret-mode kernels)
+    - tokens_per_s within [ref * lo, ref * hi]
+    - ttft_p50_s / ttft_p99_s within their band on poisson rows
+
+Rows are keyed by the metrics that select a compiled serving
+configuration: (mode, layout, impl, prefill_chunk, admission_mode).
+
+Regenerate the reference values after an intentional perf change with
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py ... \
+        --json BENCH_serve.json
+    python scripts/check_bench.py --update
+
+and commit both files; the bands themselves (lo/hi factors) are
+hand-maintained in bench_bands.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(REPO, "BENCH_serve.json")
+BANDS = os.path.join(REPO, "benchmarks", "bench_bands.json")
+
+BANDED = ("tokens_per_s", "ttft_p50_s", "ttft_p99_s")
+EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref")
+
+
+def row_key(row):
+    return "|".join([row["mode"], row["layout"], row["impl"],
+                     f"chunk{row.get('prefill_chunk', 0)}",
+                     row.get("admission_mode", "-")])
+
+
+def check(bench_path=BENCH, bands_path=BANDS):
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(bands_path) as f:
+        bands = json.load(f)
+    rows = {row_key(r): r for r in bench["rows"]}
+    errors = []
+
+    for key, ref in bands["rows"].items():
+        row = rows.get(key)
+        if row is None:
+            errors.append(f"{key}: banded row missing from {bench_path}")
+            continue
+        if row.get("recompiled_after_warmup", False):
+            errors.append(f"{key}: recompiled after warmup")
+        for flag in EXACT_TRUE:
+            if flag in row and row[flag] is not True:
+                errors.append(f"{key}: {flag} is {row[flag]}")
+        for metric, value in ref.items():
+            if metric not in BANDED or metric not in row:
+                continue
+            lo, hi = bands["band"].get(metric, bands["band"]["default"])
+            if not (value * lo <= row[metric] <= value * hi):
+                errors.append(
+                    f"{key}: {metric}={row[metric]:.4g} outside "
+                    f"[{value * lo:.4g}, {value * hi:.4g}] "
+                    f"(= ref {value:.4g} x [{lo}, {hi}])")
+
+    # relative gate: the chunked ragged ref row must not fall back to the
+    # pre-fused-gather regime (it used to run ~7x slower than packed —
+    # attend-before-append plus the fused kernel body closed most of it)
+    for gate in bands.get("ratio_gates", []):
+        num, den = rows.get(gate["row"]), rows.get(gate["vs"])
+        if num is None or den is None:
+            errors.append(f"ratio gate {gate['row']} vs {gate['vs']}: "
+                          f"row missing")
+            continue
+        ratio = num["tokens_per_s"] / den["tokens_per_s"]
+        if ratio < gate["min_ratio"]:
+            errors.append(
+                f"{gate['row']}: tokens_per_s is {ratio:.3f}x of "
+                f"{gate['vs']} (gate: >= {gate['min_ratio']}x) — "
+                f"{gate.get('why', '')}")
+    return errors
+
+
+def update(bench_path=BENCH, bands_path=BANDS):
+    """Refresh the reference values in-place, preserving the band
+    factors and ratio gates (hand-maintained policy)."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(bands_path) as f:
+        bands = json.load(f)
+    for key in bands["rows"]:
+        row = next((r for r in bench["rows"] if row_key(r) == key), None)
+        if row is None:
+            raise SystemExit(f"--update: banded row {key} missing from "
+                             f"{bench_path}")
+        bands["rows"][key] = {m: row[m] for m in BANDED if m in row}
+    with open(bands_path, "w") as f:
+        json.dump(bands, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"check_bench: refreshed {len(bands['rows'])} reference rows "
+          f"in {bands_path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=BENCH)
+    ap.add_argument("--bands", default=BANDS)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the reference values in the bands file "
+                         "from the current benchmark artifact")
+    args = ap.parse_args(argv)
+    if args.update:
+        update(args.bench, args.bands)
+        return 0
+    errors = check(args.bench, args.bands)
+    for e in errors:
+        print(f"check_bench: FAIL {e}", file=sys.stderr)
+    if errors:
+        return 1
+    with open(args.bands) as f:
+        n = len(json.load(f)["rows"])
+    print(f"check_bench: OK ({n} banded rows in-band, recompile and "
+          f"token-match flags clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

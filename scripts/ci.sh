@@ -23,14 +23,19 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"
 
 if [[ "${FAST:-0}" != "1" ]]; then
   # serve-throughput smoke: machine-readable perf rows (tok/s per
-  # layout x impl x admission mode, occupancy, recompile flags, and the
-  # poisson-arrival TTFT/ITL latency rows with the packed-vs-chunked
-  # prefill comparison) -> BENCH_serve.json
+  # layout x impl x admission mode, occupancy, recompile flags, the
+  # ref-vs-pallas comparison rows, and the poisson-arrival TTFT/ITL
+  # latency rows with the packed-vs-chunked prefill comparison)
+  # -> BENCH_serve.json, held against the committed bands
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
-      --prefill-chunk 8 --arrival poisson \
+      --prefill-chunk 8 --arrival poisson --attn-impl pallas \
       --json BENCH_serve.json
+  # perf gate: tokens/s and TTFT within the committed bands
+  # (benchmarks/bench_bands.json), recompile flags and chunked/pallas
+  # token-match flags exact, chunked-vs-packed throughput ratio floor
+  python scripts/check_bench.py
   # ragged serving smoke rows on 8 fake devices, one per sharded layout
   # registry entry (coplace_shmap = shard_map partial attention;
   # interleave = GSPMD within-page token striping), each in both
@@ -47,4 +52,20 @@ if [[ "${FAST:-0}" != "1" ]]; then
           --prefill-chunk "$CHUNK"
     done
   done
+  # chunked prefill through the Pallas chunk kernels (interpret mode on
+  # CPU: a correctness row, not a perf row — docs/kernels.md)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
+      repro.launch.serve --arch smollm-360m --reduced \
+      --workload ragged --requests 4 --max-batch 2 \
+      --prompt-buckets 16,24 --gen-min 2 --gen-max 6 \
+      --layout coplace_shmap --admission balanced \
+      --prefill-chunk 8 --attn-impl pallas
+  # chunked prefill over recurrent mixers (mamba2): the per-slot scan
+  # state resumes across chunk boundaries (docs/serving.md)
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
+      repro.launch.serve --arch zamba2-2.7b --reduced \
+      --workload ragged --requests 4 --max-batch 2 \
+      --prompt-buckets 16,24 --gen-min 2 --gen-max 6 \
+      --prefill-chunk 8
 fi

@@ -61,15 +61,18 @@ def empty_fill_value(path: str):
     pytree key path — the single source of truth the constructors above
     encode shape-wise (``make_paged_cache`` / ``make_stream_cache``):
     tau_min +inf, tau_max -inf, page_start and the stream ring's ``pos``
-    -1, everything else 0. Consumed by the serving engine's dynamic-slot
-    reset (chunked admission) so a cleared slot row is exactly what a
-    fresh constructor would produce."""
+    -1, the xLSTM max-stabilizer ``m`` -inf (init_mlstm_state /
+    init_slstm_state), everything else 0. Consumed by the serving
+    engine's dynamic-slot reset (chunked admission) so a cleared slot
+    row is exactly what a fresh constructor would produce."""
     if "tau_min" in path:
         return jnp.inf
     if "tau_max" in path:
         return -jnp.inf
     if "page_start" in path or path.endswith(".pos"):
         return -1
+    if path.endswith("['m']"):
+        return -jnp.inf
     return 0
 
 

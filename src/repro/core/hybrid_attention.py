@@ -213,12 +213,17 @@ def chunk_prefill_attention(
     metadata merge is exact.
 
     ``phys_shards`` > 1 applies the coplace_shmap round-robin physical
-    page order on append; attention masks are built from absolute
-    positions (core/paging.py chunk_* helpers) so the math is identical
-    on every layout. Numerics: the chunk body reassociates float sums
-    differently from the single-shot flash prefill, so chunked and
-    packed admission agree to float tolerance — greedy traces match off
-    argmax ties (EXPERIMENTS.md §Serving experiments).
+    page order on append; validity is derived from absolute positions
+    (in-op for the retrieval body, core/paging.py chunk_* helpers for
+    the streaming ring) so the math is identical on every layout. The
+    retrieval body is ``kops.chunk_attention_paged`` selected by static
+    ``spec.impl`` — ref or the Pallas fused-gather kernel — and attends
+    the PRE-append buffer plus the chunk's own KV, so the page scatter
+    never serializes before the attention. Numerics: the chunk body
+    reassociates float sums differently from the single-shot flash
+    prefill, so chunked and packed admission agree to float tolerance —
+    greedy traces match off argmax ties (EXPERIMENTS.md §Serving
+    experiments).
     """
     h2 = spec.h2
     g = spec.group
@@ -236,17 +241,21 @@ def chunk_prefill_attention(
 
     outs = []
     if nr > 0:
+        # fused pre-append body: the chunk attends [paged buffer ∥ chunk
+        # keys] with validity computed from page metadata inside the op
+        # (per-key for the buffer, static causal for the chunk) — no
+        # (B, H, Cq, T) mask, and the append no longer serializes before
+        # the attention. Under coplace_shmap the physical page striping
+        # only reorders pages; page_start rides along, so the in-op
+        # position math is layout-invariant.
+        k_r = kp[:, :, :nr]
+        v_r = vp[:, :, :nr]
+        outs.append(kops.chunk_attention_paged(
+            qp[:, :, : nr * g], paged.k_pages, paged.v_pages,
+            paged.page_start, start, k_r, v_r, impl=spec.impl))
         paged = cachelib.paged_cache_append_chunk(
-            paged, kp[:, :, :nr], vp[:, :, :nr], start, chunk_len,
+            paged, k_r, v_r, start, chunk_len,
             active=act, phys_shards=phys_shards)
-        p_sz = paged.k_pages.shape[3]
-        cap_pages = paged.k_pages.shape[2]
-        kb = paged.k_pages.reshape(b, nr, cap_pages * p_sz, -1)
-        vb = paged.v_pages.reshape(b, nr, cap_pages * p_sz, -1)
-        key_pos, key_ok = paging.paged_key_positions(paged.page_start, p_sz)
-        valid = paging.chunk_causal_validity(key_pos, key_ok, pos_q)
-        outs.append(kops.chunk_attention(qp[:, :, : nr * g], kb, vb, valid,
-                                         impl=spec.impl))
     if spec.n_streaming > 0:
         ns = spec.n_streaming
         k_s = kp[:, :, nr:]                                 # (B, C, Hs, D)

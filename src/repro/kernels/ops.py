@@ -74,11 +74,34 @@ def paged_attention(q, k, v, valid, *, impl="ref"):
 def chunk_attention(q, k, v, valid, *, impl="ref"):
     """Multi-query attention over a gathered KV buffer with per-query
     validity (the chunked-prefill body; kernels/ref.py for the shape
-    contract). There is no dedicated Pallas kernel yet — both impls
-    lower the jnp reference, so chunked prefill is impl-invariant and a
-    ref-vs-pallas engine pair still emits identical prompt KV."""
-    resolve_impl(impl)  # validate; both impls share the reference body
-    return _ref.chunk_attention_ref(q, k, v, valid)
+    contract). impl="pallas" streams KV tiles past the VMEM-resident
+    chunk of queries with online softmax (kernels/chunk_attention.py);
+    it used to silently fall back to the reference body."""
+    if resolve_impl(impl) == "ref":
+        return _ref.chunk_attention_ref(q, k, v, valid)
+    from repro.kernels import chunk_attention as ck
+    return ck.chunk_attention(q, k, v, valid, interpret=_INTERPRET)
+
+
+def chunk_attention_paged(q, k_pages, v_pages, page_start, start, k_new,
+                          v_new, *, impl="ref"):
+    """Chunked-prefill retrieval attention with the page gather fused:
+    attends the PRE-append paged buffer (per-key validity from
+    page_start) plus the chunk's own KV (static causal mask) in one
+    online-softmax stream — no materialized (B, H, Cq, T) mask. See
+    kernels.ref.chunk_attention_paged_ref for the shape contract.
+
+    The chunk KV is cast to the cache dtype first so both impls attend
+    exactly what a post-append body would have read back."""
+    k_new = k_new.astype(k_pages.dtype)
+    v_new = v_new.astype(v_pages.dtype)
+    if resolve_impl(impl) == "ref":
+        return _ref.chunk_attention_paged_ref(
+            q, k_pages, v_pages, page_start, start, k_new, v_new)
+    from repro.kernels import chunk_attention as ck
+    return ck.chunk_attention_paged(
+        q, k_pages, v_pages, page_start, start, k_new, v_new,
+        interpret=_INTERPRET)
 
 
 def paged_attention_partial(q, k, v, valid, *, impl="ref"):

@@ -236,6 +236,64 @@ def chunk_attention_ref(q: Array, k: Array, v: Array, valid: Array) -> Array:
     return out.reshape(b, cq, hq, d).astype(q.dtype)
 
 
+def chunk_attention_paged_ref(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    page_start: Array,
+    start: Array,
+    k_new: Array,
+    v_new: Array,
+) -> Array:
+    """Chunked-prefill retrieval attention with the page gather fused.
+
+    q: (B, Cq, Hq, D) — one chunk of queries per slot; k_pages/v_pages:
+    (B, Hr, C, P, D) — the PRE-append paged buffer; page_start:
+    (B, Hr, C) absolute position of each page's first token (-1 =
+    unwritten); start: (B,) tokens already admitted per slot; k_new/v_new:
+    (B, Cq, Hr, D) — the chunk's own keys/values (roped, kv-head order).
+
+    Because the buffer is pre-append, every buffered key precedes every
+    chunk query (pos < start <= start + c), so cache validity is per-KEY
+    — no (B, H, Cq, T) mask is ever materialized — and the intra-chunk
+    part is a static causal triangle (key j attends query c iff j <= c).
+    The union of the two key sets equals ``chunk_attention_ref`` over the
+    post-append buffer with the positional mask (position math is inlined
+    here; core.paging imports kernels.ops, so importing it back would be
+    circular). Every query row attends at least itself, so no all-invalid
+    guard is needed. Returns (B, Cq, Hq, D).
+    """
+    b, cq, hq, d = q.shape
+    hr, c, p = k_pages.shape[1:4]
+    group = hq // hr
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kb = k_pages.reshape(b, hr, c * p, d)
+    vb = v_pages.reshape(b, hr, c * p, d)
+    start = jnp.asarray(start, jnp.int32).reshape(b)
+    offs = jnp.arange(p, dtype=jnp.int32)
+    pos = (page_start[..., None] + offs).reshape(b, hr, c * p)
+    written = jnp.broadcast_to(
+        (page_start >= 0)[..., None], (b, hr, c, p)).reshape(b, hr, c * p)
+    cache_ok = written & (pos < start[:, None, None])        # (B, Hr, C*P)
+
+    qg = q.reshape(b, cq, hr, group, d).astype(kb.dtype)
+    lc = jnp.einsum("bchgd,bhtd->bhgct", qg, kb,
+                    preferred_element_type=jnp.float32) * scale
+    lc = jnp.where(cache_ok[:, :, None, None, :], lc, NEG_INF)
+    kn = k_new.astype(kb.dtype)
+    ln = jnp.einsum("bchgd,bjhd->bhgcj", qg, kn,
+                    preferred_element_type=jnp.float32) * scale
+    causal = jnp.arange(cq)[:, None] >= jnp.arange(cq)[None, :]
+    ln = jnp.where(causal[None, None, None], ln, NEG_INF)
+    probs = jax.nn.softmax(jnp.concatenate([lc, ln], axis=-1), axis=-1)
+    out = jnp.einsum("bhgct,bhtd->bchgd", probs[..., : c * p].astype(
+        vb.dtype), vb, preferred_element_type=jnp.float32)
+    out = out + jnp.einsum(
+        "bhgcj,bjhd->bchgd", probs[..., c * p:].astype(v_new.dtype),
+        v_new.astype(vb.dtype), preferred_element_type=jnp.float32)
+    return out.reshape(b, cq, hq, d).astype(q.dtype)
+
+
 def paged_attention_partial_ref(q, k, v, valid):
     """Partial (unnormalized) attention for cross-shard combine.
 

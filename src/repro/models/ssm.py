@@ -216,6 +216,95 @@ def mamba2_step(cfg: ArchConfig, params, state, x: Array):
     return dense(y, params["out_proj"]), new_state
 
 
+def mamba2_prefill_chunk(cfg: ArchConfig, params, state, x: Array, *,
+                         chunk_len, active=None):
+    """One prefill chunk resuming from per-slot saved recurrent state.
+
+    x: (B, C, d) — the chunk's block inputs; state: as
+    ``init_mamba2_state`` (conv_* hold the PRE-conv inputs of the last
+    K-1 consumed positions, ssm the (H, N, P) SSD state). chunk_len:
+    scalar or (B,) valid tokens in the chunk; active: (B,) bool. Returns
+    (y (B, C, d), state').
+
+    The chunk is processed as ONE SSD chunk resumed from ``state`` (the
+    serving chunk is bounded, so the O(C²) intra-chunk decay matrix is
+    the same re-blocking mamba2_forward uses per chunk). Ragged tails
+    and inactive slots are identity on the state: dt is zeroed past
+    chunk_len (decay exp(0) = 1, contribution 0 — exactly the zero-pad
+    treatment in mamba2_forward) and the conv-history gather at eff = 0
+    returns the old window bit-exactly. Outputs past chunk_len are
+    garbage the caller ignores. Numerics: resuming chunk-by-chunk
+    reassociates float sums vs one packed pass, so chunked and packed
+    prefill agree to float tolerance.
+    """
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    n_heads = inner // s.head_dim
+    bsz, c, _ = x.shape
+    k = s.conv_dim
+    eff = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (bsz,))
+    if active is not None:
+        eff = jnp.where(jnp.asarray(active).reshape(bsz), eff, 0)
+
+    z = dense(x, params["w_z"])
+    dt_raw = dense(x, params["w_dt"])
+
+    def conv_resume(hist, pre, w, b):
+        # causal conv over [carried history ∥ chunk]: position t sees
+        # buf[t : t+K] — identical to _causal_conv's left-pad when the
+        # history is zeros (fresh slot)
+        buf = jnp.concatenate([hist.astype(pre.dtype), pre], axis=1)
+        out = sum(buf[:, i: i + c, :] * w[i][None, None, :]
+                  for i in range(k))
+        out = jax.nn.silu(out + b)
+        # new history: pre-conv inputs of the last K-1 consumed
+        # positions; eff = 0 gathers the old window back bit-exactly
+        idx = eff[:, None] + jnp.arange(k - 1)
+        hist_new = jnp.take_along_axis(buf, idx[:, :, None], axis=1)
+        return out, hist_new.astype(hist.dtype)
+
+    xs, hx = conv_resume(state["conv_x"], dense(x, params["w_x"]),
+                         params["conv_x"], params["conv_bx"])
+    B, hB = conv_resume(state["conv_B"], dense(x, params["w_B"]),
+                        params["conv_B"], params["conv_bB"])
+    C, hC = conv_resume(state["conv_C"], dense(x, params["w_C"]),
+                        params["conv_C"], params["conv_bC"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])       # (B,C,H)
+    valid = jnp.arange(c)[None, :] < eff[:, None]                  # (B,C)
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    a = -jnp.exp(params["A_log"])
+    log_da = a[None, None, :] * dt
+    G = jnp.cumsum(log_da, axis=1)                                 # (B,C,H)
+
+    xh = xs.reshape(bsz, c, n_heads, s.head_dim).astype(jnp.float32)
+    Bc = B.astype(jnp.float32)
+    Cc = C.astype(jnp.float32)
+    cb = jnp.einsum("bin,bjn->bij", Cc, Bc)
+    causal = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+              )[None, :, :, None]
+    logw = G[:, :, None, :] - G[:, None, :, :]                     # (B,i,j,H)
+    w = jnp.where(causal, jnp.exp(logw), 0.0) * cb[..., None] \
+        * dt[:, None, :, :]
+    y = jnp.einsum("bijh,bjhp->bihp", w, xh)
+    # inter-chunk: resumed state seen through each position's decay
+    y = y + jnp.einsum("bin,bhnp,bih->bihp", Cc, state["ssm"],
+                       jnp.exp(G))
+    # carry: S' = exp(G_last)·S + Σ_j exp(G_last - G_j) dt_j B_j ⊗ x_j
+    # (masked positions contribute decay 1 / weight 0, so G_last is the
+    # decay over exactly the valid prefix)
+    decay_to_end = jnp.exp(G[:, -1:, :] - G)
+    sc = jnp.einsum("bjh,bjn,bjhp->bhnp", decay_to_end * dt, Bc, xh)
+    ssm = jnp.exp(G[:, -1, :])[:, :, None, None] * state["ssm"] + sc
+
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(bsz, c, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    new_state = {"ssm": ssm, "conv_x": hx, "conv_B": hB, "conv_C": hC}
+    return dense(y, params["out_proj"]), new_state
+
+
 def mamba2_final_state(cfg: ArchConfig, params, x: Array):
     """Final (ssm, conv_*) state after consuming x: (B, L, d)."""
     s = cfg.ssm

@@ -318,48 +318,65 @@ def block_prefill_chunk(cfg: ArchConfig, pos: int, p, plan, x, rope, cache,
     (B,) is each slot's context before the chunk, ``chunk_len`` (B,) its
     valid tokens, ``active`` (B,) the slots prefilling this step. Rows
     past chunk_len / inactive slots append nothing and produce garbage
-    activations (attention masks keep them out of every other position;
-    the FFN is pointwise). Only attention mixers support chunked prefill
-    — recurrent mixers (mamba2/xlstm) would need a chunk-resumable scan
-    state and keep the prefill-then-pack path (the engine validates at
-    construction)."""
+    activations (attention masks keep them out of every other position,
+    recurrent mixers freeze their scan state past chunk_len; the FFN is
+    pointwise). Recurrent mixers resume their per-slot saved state
+    (conv history + SSM/cell state) and write the advanced state back
+    into the block cache — the chunk-resumable scan that lets every
+    mixer share chunked admission."""
     from repro.runtime import hints
     p = hints.unshard_block_params(p)
     x = hints.act(x)
     mixer = cfg.mixer_for_layer(pos)
-    if mixer != MIXER_ATTENTION:
-        raise NotImplementedError(
-            f"chunked prefill supports attention mixers only (layer {pos} "
-            f"is {mixer!r}); use prefill-then-pack admission")
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
-    spec = attn_spec(cfg, pos, impl)
-    q, k, v = _qkv(cfg, p, h)
-    cos, sin = rope
-    q = apply_rope(q, cos, sin)
-    k = apply_rope(k, cos, sin)
-    b, cch = q.shape[0], q.shape[1]
-    if spec.h2.enabled and spec.window == 0:
-        inputs = layoutlib.PrefillInputs(
-            q=q, k_new=k, v_new=v, start=start, chunk_len=chunk_len,
+    b, cch = x.shape[0], x.shape[1]
+    if mixer == MIXER_ATTENTION:
+        spec = attn_spec(cfg, pos, impl)
+        q, k, v = _qkv(cfg, p, h)
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if spec.h2.enabled and spec.window == 0:
+            inputs = layoutlib.PrefillInputs(
+                q=q, k_new=k, v_new=v, start=start, chunk_len=chunk_len,
+                active=active)
+            o, cache = layoutlib.dispatch_prefill_chunk(
+                layout, spec, cache, inputs, perm=plan["perm"])
+        else:  # full-attention baseline / plain window layer
+            from repro.core import paging
+            full = cachelib.full_cache_append_chunk(
+                cache["full"], k, v, start, chunk_len, active=active)
+            pos_q = paging.chunk_positions(start, cch)
+            key_pos = jnp.arange(full.k.shape[2], dtype=jnp.int32)
+            kp = key_pos[None, None, None, :]
+            pq = pos_q[:, None, :, None]
+            valid = jnp.broadcast_to(
+                kp <= pq, (b, full.k.shape[1], cch, full.k.shape[2]))
+            if spec.window > 0:
+                valid = valid & (kp > pq - spec.window)
+            from repro.kernels import ops as kops
+            o = kops.chunk_attention(q, full.k, full.v, valid,
+                                     impl=spec.impl)
+            cache = {"full": full}
+        x = x + dense(o.reshape(b, cch, -1), p["wo"])
+    elif mixer == MIXER_MAMBA2:
+        y, st = ssmlib.mamba2_prefill_chunk(
+            cfg, p["mamba"], cache["ssm"], h, chunk_len=chunk_len,
             active=active)
-        o, cache = layoutlib.dispatch_prefill_chunk(
-            layout, spec, cache, inputs, perm=plan["perm"])
-    else:  # full-attention baseline / plain window layer
-        from repro.core import paging
-        full = cachelib.full_cache_append_chunk(
-            cache["full"], k, v, start, chunk_len, active=active)
-        pos_q = paging.chunk_positions(start, cch)
-        key_pos = jnp.arange(full.k.shape[2], dtype=jnp.int32)
-        kp = key_pos[None, None, None, :]
-        pq = pos_q[:, None, :, None]
-        valid = jnp.broadcast_to(
-            kp <= pq, (b, full.k.shape[1], cch, full.k.shape[2]))
-        if spec.window > 0:
-            valid = valid & (kp > pq - spec.window)
-        from repro.kernels import ops as kops
-        o = kops.chunk_attention(q, full.k, full.v, valid, impl=spec.impl)
-        cache = {"full": full}
-    x = x + dense(o.reshape(b, cch, -1), p["wo"])
+        x = x + y
+        cache = {"ssm": st}
+    elif mixer == MIXER_MLSTM:
+        y, st = xlstmlib.mlstm_prefill_chunk(
+            cfg, p["xl"], cache["xl"], h, chunk_len=chunk_len,
+            active=active)
+        x = x + y
+        cache = {"xl": st}
+    elif mixer == MIXER_SLSTM:
+        y, st = xlstmlib.slstm_prefill_chunk(
+            cfg, p["xl"], cache["xl"], h, chunk_len=chunk_len,
+            active=active)
+        x = x + y
+        cache = {"xl": st}
     if cfg.layer_has_ffn(pos):
         x = _ffn_apply(cfg, p, x)
     return x, cache
@@ -400,18 +417,32 @@ def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
     elif mixer == MIXER_MAMBA2:
         y, st = ssmlib.mamba2_step(cfg, p["mamba"], cache["ssm"], h)
         x = x + y
-        cache = {"ssm": st}
+        cache = {"ssm": _keep_active(st, cache["ssm"], active)}
     elif mixer == MIXER_MLSTM:
         y, st = xlstmlib.mlstm_step(cfg, p["xl"], cache["xl"], h)
         x = x + y
-        cache = {"xl": st}
+        cache = {"xl": _keep_active(st, cache["xl"], active)}
     elif mixer == MIXER_SLSTM:
         y, st = xlstmlib.slstm_step(cfg, p["xl"], cache["xl"], h)
         x = x + y
-        cache = {"xl": st}
+        cache = {"xl": _keep_active(st, cache["xl"], active)}
     if cfg.layer_has_ffn(pos):
         x = _ffn_apply(cfg, p, x)
     return x, cache
+
+
+def _keep_active(new, old, active):
+    """Freeze recurrent state for slots not decoding this ragged step —
+    a slot mid-chunked-prefill keeps its saved chunk state intact across
+    interleaved decode steps (the attention caches get the same
+    protection from their append ops' ``active`` masks). ``active`` is
+    None on the lockstep path: no-op."""
+    if active is None:
+        return new
+    act = jnp.asarray(active).reshape(-1)
+    keep = lambda n, o: jnp.where(
+        act.reshape((act.shape[0],) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(keep, new, old)
 
 
 def _mamba2_prefill_with_state(cfg, p, h):

@@ -108,6 +108,65 @@ def mlstm_forward(cfg: ArchConfig, params, x: Array) -> Array:
     return dense(y, params["out_proj"])
 
 
+def _masked_scan_resume(state, step_fn, xs, valid, bsz):
+    """Run a recurrence over a chunk resuming from ``state``, freezing
+    state leaves at positions past each slot's chunk_len.
+
+    step_fn(state, inp) -> (state', h_t); xs: time-major per-step inputs;
+    valid: (C, B) bool. Masked steps (ragged tail, inactive slots) leave
+    every leaf untouched, so the resume is bit-exact vs one packed scan —
+    the per-step updates are the identical float ops on identical
+    operands (the -inf m stabilizer stays safe: the isfinite guards in
+    the update fns run regardless, and jnp.where selects the old leaf).
+    """
+
+    def step(st, inp):
+        *inner, vld = inp
+        st2, h_t = step_fn(st, inner)
+        keep = lambda new, old: jnp.where(
+            vld.reshape((bsz,) + (1,) * (new.ndim - 1)), new, old)
+        return jax.tree.map(keep, st2, st), h_t
+
+    return jax.lax.scan(step, state, (*xs, valid))
+
+
+def mlstm_prefill_chunk(cfg: ArchConfig, params, state, x: Array, *,
+                        chunk_len, active=None):
+    """One prefill chunk resuming from per-slot saved (C, n, m) state.
+
+    x: (B, C, d); state: as ``init_mlstm_state``; chunk_len: scalar or
+    (B,) valid tokens; active: (B,) bool. Returns (y (B, C, d), state').
+    Outputs past chunk_len are garbage the caller ignores; masked steps
+    are identity on the state, so chunked prefill is bit-exact vs packed
+    for the recurrence itself.
+    """
+    b, c, d = x.shape
+    h = cfg.num_heads
+    p = d // h
+    qkv = dense(x, params["w_qkv"]).astype(jnp.float32)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    it, ft = _mlstm_gates(params, x)
+    o = jax.nn.sigmoid(dense(x, params["w_o"]).astype(jnp.float32))
+    eff = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    if active is not None:
+        eff = jnp.where(jnp.asarray(active).reshape(b), eff, 0)
+    valid = jnp.arange(c)[None, :] < eff[:, None]                  # (B,C)
+
+    def step_fn(st, inner):
+        qt, kt, vt, i_t, f_t = inner
+        return _mlstm_update(
+            st, qt.reshape(b, h, p), kt.reshape(b, h, p),
+            vt.reshape(b, h, p), i_t, f_t)
+
+    xs = (q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2),
+          it.transpose(1, 0, 2), ft.transpose(1, 0, 2))
+    new_state, hs = _masked_scan_resume(state, step_fn, xs, valid.T, b)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, c, d)
+    y = (o * hs).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"]), new_state
+
+
 def mlstm_step(cfg: ArchConfig, params, state, x: Array):
     """x: (B, d) -> (y (B, d), state')."""
     b, d = x.shape
@@ -191,6 +250,32 @@ def slstm_forward(cfg: ArchConfig, params, x: Array) -> Array:
     hs = hs.transpose(1, 0, 2, 3).reshape(b, L, d).astype(x.dtype)
     y = rms_norm(hs, params["norm_w"], cfg.norm_eps)
     return dense(y, params["out_proj"])
+
+
+def slstm_prefill_chunk(cfg: ArchConfig, params, state, x: Array, *,
+                        chunk_len, active=None):
+    """One prefill chunk resuming from per-slot saved (c, n, m, h) state.
+
+    Same contract as ``mlstm_prefill_chunk``; the recurrent-gate input
+    R·h_{t-1} makes sLSTM inherently sequential, so this is the packed
+    scan with frozen leaves past chunk_len (bit-exact resume).
+    """
+    b, c, d = x.shape
+    wx = dense(x, params["w"])
+    eff = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    if active is not None:
+        eff = jnp.where(jnp.asarray(active).reshape(b), eff, 0)
+    valid = jnp.arange(c)[None, :] < eff[:, None]                  # (B,C)
+
+    def step_fn(st, inner):
+        (wxt,) = inner
+        return _slstm_step_inner(cfg, params, st, wxt)
+
+    new_state, hs = _masked_scan_resume(
+        state, step_fn, (wx.transpose(1, 0, 2),), valid.T, b)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, c, d).astype(x.dtype)
+    y = rms_norm(hs, params["norm_w"], cfg.norm_eps)
+    return dense(y, params["out_proj"]), new_state
 
 
 def slstm_step(cfg: ArchConfig, params, state, x: Array):

@@ -26,8 +26,10 @@ lockstep:
     legacy monolithic admission — batch-1 prefill (one compile per
     prompt bucket) packed into a free slot with a donated
     ``dynamic_update_slice`` tree op; kept as the token-exactness
-    oracle chunked admission is tested against, and for recurrent
-    mixers (mamba2/xlstm) whose prefill cannot yet resume mid-prompt.
+    oracle chunked admission is tested against. Recurrent mixers
+    (mamba2/xlstm) resume their per-slot scan state across chunk
+    boundaries (models/ssm.py, models/xlstm.py ``*_prefill_chunk``),
+    so chunked admission covers every mixer.
   * Retirement flips ``active`` off; the slot's caches stay bit-stable
     (appends are masked) until the next admission resets/overwrites
     them.
@@ -244,9 +246,10 @@ class Engine:
                   feeds at most N prompt tokens across the prefilling
                   slots, interleaved with the decode of every other
                   slot — bounded time-to-first-token and no decode
-                  stall on long prompts. Requires attention-only mixers
-                  and token prompts (recurrent mixers / frontend-stub
-                  archs keep packed admission).
+                  stall on long prompts. Works with every mixer
+                  (recurrent mixers resume their per-slot scan state);
+                  requires token prompts (frontend-stub archs keep
+                  packed admission).
     impl        : attention kernel implementation, ``"ref"`` (pure-jnp
                   oracle) or ``"pallas"`` (Pallas kernels; interpret mode
                   off-TPU). Validated and BAKED INTO the compiled step
@@ -283,7 +286,6 @@ class Engine:
                  prefill_chunk: Optional[int] = None):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
-        from repro.configs.base import MIXER_ATTENTION
 
         self.cfg = cfg
         self.params = params
@@ -318,12 +320,6 @@ class Engine:
                     "chunked prefill feeds token chunks through the "
                     "embedding; frontend-stub archs (vlm/audio) need "
                     "prefill_chunk=None (prefill-then-pack)")
-            mixers = {cfg.mixer_for_layer(i) for i in range(cfg.num_layers)}
-            if mixers != {MIXER_ATTENTION}:
-                raise ValueError(
-                    f"chunked prefill supports attention mixers only "
-                    f"(got {sorted(mixers)}); recurrent mixers need "
-                    f"prefill_chunk=None (prefill-then-pack)")
         self.share_window = max(cfg.h2eal.share_window, 1)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
                                     layout=self.layout, impl=self.attn_impl)
@@ -337,6 +333,17 @@ class Engine:
         # compiled program — for the chunk/reset admission ops too.
         dec_shard = {}
         reset_shard = {}
+        # _pack_slot/_reset_slot are module-level, and jax.jit keys its
+        # cache on the wrapped callable: jitting them directly would share
+        # one cache across every Engine in the process, so another
+        # engine's state pytree (e.g. a recurrent mixer's scan state)
+        # would show up in this engine's jit_cache_sizes() recompile
+        # counter. A fresh per-instance wrapper keeps the cache private.
+        def _pack_fn(big, small, slot):
+            return _pack_slot(big, small, slot)
+
+        def _reset_fn(big, slot):
+            return _reset_slot(big, slot)
         if self.plan.shard_state:
             from repro.runtime import sharding as shardlib
             ss = self.plan.state_shardings(cfg, self.batch.serve,
@@ -345,10 +352,10 @@ class Engine:
             dec_shard = {"out_shardings":
                          shardlib.serve_step_out_shardings(self.mesh, ss)}
             reset_shard = {"out_shardings": ss}
-            self._pack = jax.jit(_pack_slot, donate_argnums=(0,),
+            self._pack = jax.jit(_pack_fn, donate_argnums=(0,),
                                  out_shardings=ss)
         else:
-            self._pack = jax.jit(_pack_slot, donate_argnums=(0,))
+            self._pack = jax.jit(_pack_fn, donate_argnums=(0,))
         self._dec_sel = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=True),
             donate_argnums=(1,), **dec_shard)
@@ -360,7 +367,7 @@ class Engine:
                 serve_rt.make_prefill_chunk_step(
                     cfg, scfg, chunk=self.prefill_chunk),
                 donate_argnums=(1,), **dec_shard)
-            self._reset = jax.jit(_reset_slot, donate_argnums=(0,),
+            self._reset = jax.jit(_reset_fn, donate_argnums=(0,),
                                   **reset_shard)
         self._tok = jnp.zeros((max_batch,), jnp.int32)   # next-token feed
         self._act_dev = jnp.zeros((max_batch,), bool)    # device active mask

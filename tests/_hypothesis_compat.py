@@ -11,7 +11,8 @@ With hypothesis installed these are the real objects. Without it,
 ``@given`` degrades to running the test over a deterministic handful of
 drawn examples per strategy — always including the strategy bounds, plus
 seeded random draws — and ``@settings`` only caps the number of examples.
-Only the strategy surface this repo uses is shimmed (integers, floats).
+Only the strategy surface this repo uses is shimmed (integers, floats,
+sampled_from).
 """
 from __future__ import annotations
 
@@ -45,6 +46,12 @@ except ImportError:
         def floats(min_value=0.0, max_value=1.0):
             return _Strategy(min_value, max_value,
                              lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(elements[0], elements[-1],
+                             lambda rng: rng.choice(elements))
 
     st = _StrategiesShim()
 

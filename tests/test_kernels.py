@@ -300,6 +300,134 @@ def test_combine_partials_exact():
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
 
 
+@settings(max_examples=24)
+@given(cq=st.sampled_from([1, 3, 8, 64]),
+       density=st.sampled_from([0.0, 0.4, 1.0]),
+       seed=st.integers(0, 1 << 16))
+def test_chunk_attention_pallas_matches_ref(cq, density, seed):
+    """Pallas-interpret chunk_attention vs chunk_attention_ref across
+    chunk sizes × ragged validity masks (density=0.0 exercises the
+    all-invalid rows -> 0 guard). Token-exactness of the chunked engine
+    rides on this parity."""
+    from repro.kernels.chunk_attention import chunk_attention
+
+    b, hkv, g, t, d = 2, 2, 2, 37, 32
+    hq = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = _rand(ks[0], (b, cq, hq, d), jnp.float32)
+    k = _rand(ks[1], (b, hkv, t, d), jnp.float32)
+    v = _rand(ks[2], (b, hkv, t, d), jnp.float32)
+    valid = jax.random.bernoulli(ks[3], density, (b, hkv, cq, t))
+    out = chunk_attention(q, k, v, valid, bt=16, interpret=True)
+    exp = ref.chunk_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+    if density == 0.0:
+        assert np.all(np.asarray(out) == 0.0)
+
+
+def _paged_chunk_fixture(cq, seed, dtype=jnp.float32):
+    """A pre-append paged buffer + chunk: slot 0 resumes at start=13
+    (one full + one partial page), slot 1 is a fresh slot (start=0,
+    no pages written — the garbage buffer must be fully masked)."""
+    b, hr, g, d = 2, 2, 2, 32
+    cpages, page = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    start = jnp.asarray([13, 0], jnp.int32)
+    ps = np.full((b, hr, cpages), -1, np.int32)
+    ps[0, :, 0] = 0
+    ps[0, :, 1] = 8
+    return dict(
+        q=_rand(ks[0], (b, cq, hr * g, d), dtype),
+        k_pages=_rand(ks[1], (b, hr, cpages, page, d), dtype),
+        v_pages=_rand(ks[2], (b, hr, cpages, page, d), dtype),
+        page_start=jnp.asarray(ps),
+        start=start,
+        k_new=_rand(ks[3], (b, cq, hr, d), dtype),
+        v_new=_rand(ks[4], (b, cq, hr, d), dtype))
+
+
+@settings(max_examples=16)
+@given(cq=st.sampled_from([1, 3, 8, 64]), seed=st.integers(0, 1 << 16))
+def test_chunk_attention_paged_matches_post_append_oracle(cq, seed):
+    """The fused pre-append body (ref AND pallas-interpret) equals the
+    old formulation — chunk_attention_ref over the post-append buffer
+    with an explicit positional mask — and the two impls agree: cache
+    keys carry per-KEY validity (pos < start), the intra-chunk part a
+    static causal triangle, and their union is the causal key set."""
+    from repro.kernels.chunk_attention import chunk_attention_paged
+
+    fx = _paged_chunk_fixture(cq, seed)
+    got = ref.chunk_attention_paged_ref(**fx)
+    pal = chunk_attention_paged(**fx, bt=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(got),
+                               atol=2e-5, rtol=2e-5)
+
+    b, hr, cpages, page, d = fx["k_pages"].shape
+    kb = fx["k_pages"].reshape(b, hr, cpages * page, d)
+    vb = fx["v_pages"].reshape(b, hr, cpages * page, d)
+    pos = (fx["page_start"][..., None] + jnp.arange(page)
+           ).reshape(b, hr, cpages * page)
+    ok = jnp.broadcast_to((fx["page_start"] >= 0)[..., None],
+                          (b, hr, cpages, page)).reshape(b, hr, -1)
+    cache_ok = ok & (pos < fx["start"][:, None, None])
+    kc = jnp.concatenate([kb, fx["k_new"].transpose(0, 2, 1, 3)], axis=2)
+    vc = jnp.concatenate([vb, fx["v_new"].transpose(0, 2, 1, 3)], axis=2)
+    causal = jnp.arange(cq)[:, None] >= jnp.arange(cq)[None, :]
+    mask = jnp.concatenate([
+        jnp.broadcast_to(cache_ok[:, :, None, :],
+                         (b, hr, cq, cpages * page)),
+        jnp.broadcast_to(causal[None, None], (b, hr, cq, cq))], axis=-1)
+    oracle = ref.chunk_attention_ref(fx["q"], kc, vc, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_attention_impl_routing():
+    """ops.chunk_attention used to silently ignore ``impl`` (always the
+    ref body): unknown impls must now raise like every other op, and
+    impl="pallas" must dispatch the real kernel (parity with ref).
+    Same contract for the fused ops.chunk_attention_paged."""
+    from repro.kernels import ops
+
+    b, cq, hkv, g, t, d = 1, 3, 2, 2, 24, 32
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (b, cq, hkv * g, d), jnp.float32)
+    k = _rand(ks[1], (b, hkv, t, d), jnp.float32)
+    v = _rand(ks[2], (b, hkv, t, d), jnp.float32)
+    valid = jax.random.bernoulli(ks[3], 0.6, (b, hkv, cq, t))
+    with pytest.raises(ValueError, match="valid impls"):
+        ops.chunk_attention(q, k, v, valid, impl="cuda")
+    out = ops.chunk_attention(q, k, v, valid, impl="pallas")
+    exp = ops.chunk_attention(q, k, v, valid, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+    fx = _paged_chunk_fixture(cq=3, seed=7)
+    with pytest.raises(ValueError, match="valid impls"):
+        ops.chunk_attention_paged(**fx, impl="cuda")
+    outp = ops.chunk_attention_paged(**fx, impl="pallas")
+    expp = ops.chunk_attention_paged(**fx, impl="ref")
+    np.testing.assert_allclose(np.asarray(outp), np.asarray(expp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_attention_paged_casts_chunk_kv_to_cache_dtype():
+    """A bf16 cache with f32 chunk KV must attend the ROUNDTRIPPED chunk
+    keys (what a post-append body would read back), keeping chunked
+    prefill invariant to when the append happens."""
+    from repro.kernels import ops
+
+    fx = _paged_chunk_fixture(cq=4, seed=11, dtype=jnp.bfloat16)
+    fx32 = dict(fx, k_new=fx["k_new"].astype(jnp.float32),
+                v_new=fx["v_new"].astype(jnp.float32))
+    for impl in ("ref", "pallas"):
+        a = ops.chunk_attention_paged(**fx, impl=impl)
+        bb = ops.chunk_attention_paged(**fx32, impl=impl)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(bb, np.float32))
+
+
 def test_chunked_ref_matches_dense():
     import repro.kernels.ref as R
     old_t, old_q = R.CHUNK_THRESHOLD, R.Q_CHUNK

@@ -251,3 +251,38 @@ def test_layout_conformance_chunked(model, default_trace, name):
     eng.reset_metrics()
     eng.run(_mixed_workload(cfg, seed=11, n=2))
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
+@pytest.fixture(scope="module")
+def hybrid_model():
+    """An attention+mamba2 hybrid: the recurrent chunk-resume path must
+    conform on every layout, not just the attention-only config."""
+    cfg = reduced(get_arch("zamba2-2.7b"),
+                  mixer_pattern=("mamba2", "mamba2", "attention"),
+                  num_layers=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24])
+    mixed = {u: c.tokens for u, c in eng.run(_mixed_workload(cfg, n=3)).items()}
+    return cfg, params, mixed
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_chunked_recurrent(hybrid_model, name):
+    """Chunked-prefill conformance on a recurrent hybrid, per registry
+    entry: layouts own only the ATTENTION caches, so the per-slot scan
+    state (mamba2 ssm/conv) must resume identically under every layout —
+    token-exact vs the default-layout packed trace, zero post-warmup
+    recompiles."""
+    cfg, params, mixed_ref = hybrid_model
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name, prefill_chunk=5)
+    mixed = eng.run(_mixed_workload(cfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    assert eng.stats.prefill_chunks > 0
+    sizes0 = eng.jit_cache_sizes()
+    eng.reset_metrics()
+    eng.run(_mixed_workload(cfg, seed=11, n=2))
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles

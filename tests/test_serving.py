@@ -514,9 +514,12 @@ def test_chunked_decode_continues_during_long_prefill(model):
 
 def test_chunked_prefill_validation(model):
     """Chunked mode rejects what it cannot serve, at construction or
-    submit time: recurrent mixers, frontend-stub archs, and prompts that
-    leave no room to decode. Bucket membership is NOT required (chunk
-    compiles are per chunk bucket, not per prompt bucket)."""
+    submit time: frontend-stub archs (no token prompts to chunk) and
+    prompts that leave no room to decode. Bucket membership is NOT
+    required (chunk compiles are per chunk bucket, not per prompt
+    bucket), and recurrent mixers are NOT rejected — they resume their
+    per-slot scan state across chunk boundaries (the ISSUE-6 refactor
+    deleted the attention-only restriction)."""
     cfg, params = model
     eng = Engine(cfg, params, max_batch=1, capacity=CAP,
                  prompt_buckets=[16], prefill_chunk=4)
@@ -525,13 +528,62 @@ def test_chunked_prefill_validation(model):
     comps = eng.run([Request(uid=1, prompt=_prompt(cfg, 13, 1), max_new=2)])
     assert len(comps[1].tokens) == 2          # non-bucket length is fine
 
-    zcfg = reduced(get_arch("zamba2-2.7b"))   # mamba2 mixers
-    zparams = M.init_params(zcfg, jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="attention mixers"):
-        Engine(zcfg, zparams, max_batch=1, capacity=CAP,
+    vcfg = reduced(get_arch("internvl2-1b"))  # frontend-stub (vlm)
+    vparams = M.init_params(vcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="frontend-stub"):
+        Engine(vcfg, vparams, max_batch=1, capacity=CAP,
                prompt_buckets=[16], prefill_chunk=4)
     # packed admission for the same arch still constructs
-    Engine(zcfg, zparams, max_batch=1, capacity=CAP, prompt_buckets=[16])
+    Engine(vcfg, vparams, max_batch=1, capacity=CAP, prompt_buckets=[16])
+
+    zcfg = reduced(get_arch("zamba2-2.7b"))   # mamba2 mixers: now served
+    zparams = M.init_params(zcfg, jax.random.PRNGKey(0))
+    zeng = Engine(zcfg, zparams, max_batch=1, capacity=CAP,
+                  prompt_buckets=[16], prefill_chunk=4)
+    zc = zeng.run([Request(uid=0, prompt=_prompt(zcfg, 11, 5), max_new=3)])
+    assert len(zc[0].tokens) == 3
+    assert zeng.stats.prefill_chunks == 3     # ceil(11/4)
+
+
+def _recurrent_cfgs():
+    """(name, cfg) rows covering every recurrent mixer kind plus a
+    hybrid that interleaves attention and mamba2 blocks."""
+    return [
+        ("mamba2", reduced(get_arch("zamba2-2.7b"))),
+        ("xlstm", reduced(get_arch("xlstm-125m"))),
+        ("hybrid", reduced(get_arch("zamba2-2.7b"),
+                           mixer_pattern=("mamba2", "mamba2", "attention"),
+                           num_layers=3)),
+    ]
+
+
+@pytest.mark.parametrize("name,cfg",
+                         _recurrent_cfgs(),
+                         ids=[n for n, _ in _recurrent_cfgs()])
+def test_chunked_prefill_recurrent_matches_packed(name, cfg):
+    """ISSUE-6 acceptance: chunked admission over recurrent mixers
+    (mamba2 SSD scan, mlstm/slstm, and an attention+mamba2 hybrid) is
+    token-exact vs prefill-then-pack at chunks {1, 8, 64}, with slot
+    churn and zero post-warmup recompiles — per-slot scan state resumes
+    across chunk boundaries and decode-state freezing protects slots
+    that are mid-prefill while others decode."""
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng0 = Engine(cfg, params, max_batch=2, capacity=CAP,
+                  prompt_buckets=[16, 24])
+    ref = {u: c.tokens
+           for u, c in eng0.run(_mixed_workload(cfg, n=4)).items()}
+    for chunk in (1, 8, 64):
+        eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                     prompt_buckets=[16, 24], prefill_chunk=chunk)
+        got = eng.run(_mixed_workload(cfg, n=4))
+        assert sorted(got) == sorted(ref), (name, chunk)
+        for uid in sorted(ref):
+            assert got[uid].tokens == ref[uid], (name, chunk, uid)
+        assert eng.stats.prefill_chunks > 0
+        sizes0 = eng.jit_cache_sizes()
+        eng.reset_metrics()
+        eng.run(_mixed_workload(cfg, seed=9, n=2))
+        assert eng.jit_cache_sizes() == sizes0, (name, chunk)
 
 
 CHUNKED_ENGINE_CODE = """
@@ -584,6 +636,68 @@ def test_engine_chunked_sharded_exact_8dev():
                          timeout=520, cwd=REPO)
     assert out.returncode == 0, out.stderr[-4000:]
     assert out.stdout.count("CHUNKED_ENGINE_EXACT") == 2
+
+
+CHUNKED_PALLAS_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from tests.test_serving import CAP, _mixed_workload
+from repro.serving import Engine
+
+cfg = reduced(get_arch("smollm-360m"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+comps = {}
+for impl in ("ref", "pallas"):
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout="coplace_shmap",
+                 impl=impl, prefill_chunk=7)
+    comps[impl] = eng.run(_mixed_workload(cfg, n=4))
+    assert eng.stats.prefill_chunks > 0, impl
+assert sorted(comps["ref"]) == sorted(comps["pallas"])
+for uid in sorted(comps["ref"]):
+    assert comps["ref"][uid].tokens == comps["pallas"][uid].tokens, (
+        uid, comps["ref"][uid].tokens, comps["pallas"][uid].tokens)
+# the chunked pallas engine must hold the zero-recompile invariant too
+sizes0 = eng.jit_cache_sizes()
+eng.reset_metrics()
+eng.run(_mixed_workload(cfg, seed=5, n=3))
+assert eng.jit_cache_sizes() == sizes0, (sizes0, eng.jit_cache_sizes())
+# chunked recurrent state lives in the sharded batched pytree: a hybrid
+# attention+mamba2 config serves chunked on the same 8-device mesh and
+# matches its own packed trace token-for-token
+hcfg = reduced(get_arch("zamba2-2.7b"),
+               mixer_pattern=("mamba2", "mamba2", "attention"),
+               num_layers=3)
+hparams = M.init_params(hcfg, jax.random.PRNGKey(0))
+h0 = Engine(hcfg, hparams, max_batch=2, capacity=CAP,
+            prompt_buckets=[16, 24]).run(_mixed_workload(hcfg, n=4))
+h1 = Engine(hcfg, hparams, max_batch=2, capacity=CAP,
+            prompt_buckets=[16, 24],
+            prefill_chunk=7).run(_mixed_workload(hcfg, n=4))
+for uid in sorted(h0):
+    assert h0[uid].tokens == h1[uid].tokens, uid
+print("CHUNKED_PALLAS_EXACT")
+"""
+
+
+@pytest.mark.slow
+def test_engine_chunked_pallas_exact_8dev():
+    """8-fake-device subprocess (the ISSUE-6 acceptance check): chunked
+    prefill through ops.chunk_attention / ops.chunk_attention_paged with
+    impl "pallas" (interpret mode) under coplace_shmap is token-exact vs
+    impl "ref" for the same admission trace, with zero post-warmup
+    recompiles; a hybrid attention+mamba2 config chunk-prefills on the
+    same mesh and matches its packed trace."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", CHUNKED_PALLAS_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=520, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "CHUNKED_PALLAS_EXACT" in out.stdout
 
 
 def test_balanced_admission_reorders(model):
