@@ -118,12 +118,13 @@ def make_lockstep_runner(cfg, params, *, capacity):
 
 def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
                reps=1, layout="default", admission="fifo", attn_impl="ref",
-               prefill_chunk=None):
+               prefill_chunk=None, hot_pages=None):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=buckets, layout=layout, admission=admission,
-                 impl=attn_impl, prefill_chunk=prefill_chunk)
+                 impl=attn_impl, prefill_chunk=prefill_chunk,
+                 hot_pages=hot_pages)
     # warmup: touch every prompt bucket and both decode variants
     warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
                     max_new=cfg.h2eal.share_window + 2)
@@ -144,13 +145,22 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
     recompiled = any(sizes[k] != warm_sizes[k] for k in sizes
                      if sizes[k] >= 0)
     useful = sum(len(c.tokens) for c in completions.values())
-    return {"useful_tokens": useful, "decode_steps": s.decode_steps,
-            "wall_s": dt, "tokens_per_s": useful / dt,
-            "tokens_per_step": useful / max(s.decode_steps, 1),
-            "occupancy": s.occupancy, "recompiled_after_warmup": recompiled,
-            "jit_cache": sizes,
-            "tokens": {uid: list(c.tokens)
-                       for uid, c in completions.items()}}
+    out = {"useful_tokens": useful, "decode_steps": s.decode_steps,
+           "wall_s": dt, "tokens_per_s": useful / dt,
+           "tokens_per_step": useful / max(s.decode_steps, 1),
+           "occupancy": s.occupancy, "recompiled_after_warmup": recompiled,
+           "jit_cache": sizes,
+           "tokens": {uid: list(c.tokens)
+                      for uid, c in completions.items()}}
+    if hot_pages is not None:
+        out.update({
+            "hot_pages": hot_pages,
+            "tier_hits": s.tier_hits, "tier_misses": s.tier_misses,
+            "tier_spills": s.tier_spills, "tier_fills": s.tier_fills,
+            "tier_prefetch": s.tier_prefetch,
+            "tier_hit_rate": s.tier_hit_rate,
+        })
+    return out
 
 
 def dataclass_copy(x):
@@ -298,7 +308,7 @@ def _row(mode, layout, impl, r, *, lock=None, extra=None):
 def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
         gen_max=40, seed=0, reps=3, layout="default", layouts=None,
         attn_impl=None, json_path=None, prefill_chunk=None,
-        arrival="batch", arrival_rate=0.5):
+        arrival="batch", arrival_rate=0.5, tiered_hot_pages=None):
     """Lockstep vs ragged at equal token budget, per layout (x impl).
 
     ``layouts`` is an iterable of core/layouts registry names (default:
@@ -436,6 +446,61 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
             out["layouts"][name]["pallas"] = pal
             out["layouts"][name]["pallas_tokens_match_ref"] = match
 
+    if tiered_hot_pages:
+        # tiered hot/cold residency rows: a DEEPER workload (long
+        # prompts, page table >= 2x oversubscribed vs the hot budget) so
+        # the spill/prefetch machinery actually runs, served twice —
+        # all-resident oracle vs Engine(hot_pages=N) — with a
+        # token-exactness flag and the modeled far-bank traffic
+        # (runtime.perfmodel byte counts through the hbsim NoC link)
+        from repro.hbsim import sim as hbsim
+
+        t_buckets = [128]
+        t_gen = 12
+        t_cap = 160
+        t_reqs = build_requests(cfg, n=8, buckets=t_buckets,
+                                gen_min=t_gen, gen_max=t_gen, seed=seed)
+        res = run_engine(cfg, params, t_reqs, max_batch=2,
+                         capacity=t_cap, buckets=t_buckets, reps=reps)
+        tier = run_engine(cfg, params, t_reqs, max_batch=2,
+                         capacity=t_cap, buckets=t_buckets, reps=reps,
+                         hot_pages=tiered_hot_pages)
+        match = tier["tokens"] == res["tokens"]
+        p = cfg.h2eal.page_size
+        slot_pages = -(-(max(t_buckets) + t_gen) // p)
+        oversub = slot_pages / tiered_hot_pages
+        modeled = hbsim.tiered_serving_overhead(
+            cfg, fills=tier["tier_fills"], spills=tier["tier_spills"],
+            prefetch=tier["tier_prefetch"],
+            decode_steps=tier["decode_steps"])
+        rows.append(_row("ragged", "default", "ref", res,
+                         extra={"tier": "resident",
+                                "prompt_len": max(t_buckets)}))
+        rows.append(_row("ragged", "default", "ref", tier, extra={
+            "tier": "tiered", "hot_pages": tiered_hot_pages,
+            "oversubscription": oversub,
+            "tokens_match_resident": match,
+            "tier_hits": tier["tier_hits"],
+            "tier_misses": tier["tier_misses"],
+            "tier_spills": tier["tier_spills"],
+            "tier_fills": tier["tier_fills"],
+            "tier_prefetch": tier["tier_prefetch"],
+            "tier_hit_rate": tier["tier_hit_rate"],
+            "far_bank_modeled": modeled}))
+        out["tiered"] = {"resident": res, "tiered": tier,
+                         "tokens_match_resident": match,
+                         "oversubscription": oversub,
+                         "far_bank_modeled": modeled}
+        if csv:
+            print(f"serve_throughput,tiered,hot_pages,{tiered_hot_pages},"
+                  f"oversubscription,{oversub:.2f},tok_s,"
+                  f"{tier['tokens_per_s']:.2f},resident_tok_s,"
+                  f"{res['tokens_per_s']:.2f},hit_rate,"
+                  f"{tier['tier_hit_rate']:.3f},spills,"
+                  f"{tier['tier_spills']},fills,{tier['tier_fills']},"
+                  f"prefetch,{tier['tier_prefetch']},"
+                  f"tokens_match_resident,{match}")
+
     # back-compat single-layout view (deprecated alias, one release)
     first = out["layouts"][names[0]]
     out.update({"ragged": first["ragged"], "speedup": first["speedup"],
@@ -494,6 +559,13 @@ if __name__ == "__main__":
                          "per-step device sync, not a throughput number)")
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="poisson arrivals per engine step")
+    ap.add_argument("--tiered-hot-pages", type=int, default=0,
+                    help="add the tiered-residency row pair: a deep-"
+                         "prompt workload served all-resident and with "
+                         "Engine(hot_pages=N) (spill/prefetch through "
+                         "the host far store), with hit/miss/spill/"
+                         "prefetch counters, a tokens_match_resident "
+                         "flag, and the modeled far-bank traffic")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable row list (tok/s per "
                          "layout x impl x admission mode, occupancy, "
@@ -505,4 +577,5 @@ if __name__ == "__main__":
         layouts=[s.strip() for s in a.layout.split(",") if s.strip()],
         attn_impl=None if a.attn_impl == "ref" else a.attn_impl,
         json_path=a.json, prefill_chunk=a.prefill_chunk or None,
-        arrival=a.arrival, arrival_rate=a.arrival_rate)
+        arrival=a.arrival, arrival_rate=a.arrival_rate,
+        tiered_hot_pages=a.tiered_hot_pages or None)

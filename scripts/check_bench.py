@@ -19,7 +19,11 @@ instead of silently rewriting the artifact:
     - ttft_p50_s / ttft_p99_s within their band on poisson rows
 
 Rows are keyed by the metrics that select a compiled serving
-configuration: (mode, layout, impl, prefill_chunk, admission_mode).
+configuration: (mode, layout, impl, prefill_chunk, admission_mode,
+tier) — tier is "-" for untiered rows, "resident"/"tiered" for the
+hot/cold residency pair (tokens_match_resident joins the exact flags
+there, and a ratio gate holds the tiered row's throughput against the
+all-resident oracle).
 
 Regenerate the reference values after an intentional perf change with
 
@@ -29,6 +33,11 @@ Regenerate the reference values after an intentional perf change with
 
 and commit both files; the bands themselves (lo/hi factors) are
 hand-maintained in bench_bands.json.
+
+``--append-trend PATH`` additionally appends one JSONL row (keyed by
+the current git commit; re-running on the same commit replaces its row,
+so the file stays one-row-per-PR) with every row's tokens_per_s and the
+tiered residency counters — the cross-PR perf trajectory artifact.
 """
 from __future__ import annotations
 
@@ -42,13 +51,15 @@ BENCH = os.path.join(REPO, "BENCH_serve.json")
 BANDS = os.path.join(REPO, "benchmarks", "bench_bands.json")
 
 BANDED = ("tokens_per_s", "ttft_p50_s", "ttft_p99_s")
-EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref")
+EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref",
+              "tokens_match_resident")
 
 
 def row_key(row):
     return "|".join([row["mode"], row["layout"], row["impl"],
                      f"chunk{row.get('prefill_chunk', 0)}",
-                     row.get("admission_mode", "-")])
+                     row.get("admission_mode", "-"),
+                     row.get("tier", "-")])
 
 
 def check(bench_path=BENCH, bands_path=BANDS):
@@ -117,6 +128,46 @@ def update(bench_path=BENCH, bands_path=BANDS):
           f"in {bands_path}")
 
 
+def append_trend(trend_path, bench_path=BENCH):
+    """Append one JSONL trend row for the current commit: every bench
+    row's tokens_per_s plus the tiered-residency counters. Re-running on
+    the same commit replaces that commit's row, so each PR contributes
+    exactly one line to the trajectory file."""
+    import subprocess
+
+    with open(bench_path) as f:
+        bench = json.load(f)
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        commit = "unknown"
+    entry = {
+        "commit": commit,
+        "devices": bench.get("devices"),
+        "tokens_per_s": {row_key(r): round(r["tokens_per_s"], 3)
+                         for r in bench["rows"] if "tokens_per_s" in r},
+    }
+    tiered = next((r for r in bench["rows"] if r.get("tier") == "tiered"),
+                  None)
+    if tiered is not None:
+        entry["tier"] = {k: tiered[k] for k in (
+            "hot_pages", "oversubscription", "tier_hit_rate",
+            "tier_hits", "tier_misses", "tier_spills", "tier_fills",
+            "tier_prefetch", "tokens_match_resident") if k in tiered}
+    lines = []
+    if os.path.exists(trend_path):
+        with open(trend_path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if lines and json.loads(lines[-1]).get("commit") == commit:
+        lines = lines[:-1]            # refresh this commit's row
+    lines.append(json.dumps(entry, sort_keys=True))
+    with open(trend_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"check_bench: trend -> {trend_path} ({len(lines)} commits)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--bench", default=BENCH)
@@ -124,6 +175,10 @@ def main(argv=None):
     ap.add_argument("--update", action="store_true",
                     help="rewrite the reference values in the bands file "
                          "from the current benchmark artifact")
+    ap.add_argument("--append-trend", default=None, metavar="PATH",
+                    help="after a passing check, append this commit's "
+                         "tokens_per_s + tier counters as one JSONL row "
+                         "(same commit replaces its row)")
     args = ap.parse_args(argv)
     if args.update:
         update(args.bench, args.bands)
@@ -137,6 +192,8 @@ def main(argv=None):
         n = len(json.load(f)["rows"])
     print(f"check_bench: OK ({n} banded rows in-band, recompile and "
           f"token-match flags clean)")
+    if args.append_trend:
+        append_trend(args.append_trend, args.bench)
     return 0
 
 

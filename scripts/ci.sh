@@ -24,18 +24,21 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"
 if [[ "${FAST:-0}" != "1" ]]; then
   # serve-throughput smoke: machine-readable perf rows (tok/s per
   # layout x impl x admission mode, occupancy, recompile flags, the
-  # ref-vs-pallas comparison rows, and the poisson-arrival TTFT/ITL
-  # latency rows with the packed-vs-chunked prefill comparison)
+  # ref-vs-pallas comparison rows, the poisson-arrival TTFT/ITL
+  # latency rows with the packed-vs-chunked prefill comparison, and
+  # the tiered-residency row pair at 2x oversubscribed page capacity)
   # -> BENCH_serve.json, held against the committed bands
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
       --prefill-chunk 8 --arrival poisson --attn-impl pallas \
-      --json BENCH_serve.json
+      --tiered-hot-pages 9 --json BENCH_serve.json
   # perf gate: tokens/s and TTFT within the committed bands
-  # (benchmarks/bench_bands.json), recompile flags and chunked/pallas
-  # token-match flags exact, chunked-vs-packed throughput ratio floor
-  python scripts/check_bench.py
+  # (benchmarks/bench_bands.json), recompile flags and chunked/pallas/
+  # tiered token-match flags exact, chunked-vs-packed and
+  # tiered-vs-resident throughput ratio floors; on success, append this
+  # commit's row to the cross-PR perf trajectory
+  python scripts/check_bench.py --append-trend benchmarks/bench_trend.jsonl
   # ragged serving smoke rows on 8 fake devices, one per sharded layout
   # registry entry (coplace_shmap = shard_map partial attention;
   # interleave = GSPMD within-page token striping), each in both

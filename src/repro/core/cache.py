@@ -20,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -516,6 +517,226 @@ def pool_append(cache: PagedCache, k_new: Array, v_new: Array, length: Array,
     return dataclasses.replace(
         cache, k_pages=k_pages, v_pages=v_pages, tau_min=tau_min,
         tau_max=tau_max, importance=importance, page_start=page_start)
+
+
+# ---------------------------------------------------------------------------
+# Tiered hot/cold page residency (two-tier KV cache)
+#
+# The paged caches' k/v page rows are the only leaves that move between
+# tiers: selection scores, page validity, and the append bookkeeping all
+# read the metadata leaves (tau_min/tau_max/importance/page_start), which
+# stay device-resident, so a spilled page is *selectable* (and its
+# selection is bit-identical to the all-resident cache) even while its
+# contents live in the far store. The serving engine detects
+# selected-but-cold pages after the (metadata-only) selection, fills
+# them, and replays the step — served late, never skipped.
+#
+# The three tree ops below are generic over a batched serve-state pytree:
+# they path-match leaves whose key ends in ``.k_pages`` / ``.v_pages``
+# and use the engine's leaf convention (batch axis 1 for scan-stacked
+# "blocks" leaves, else 0; the page axis is two to the right of batch).
+# Page-index vectors are fixed-length (the cache's page count) and
+# -1-padded; padded entries are routed to a transient overflow row that
+# is sliced away (the ``_ext_overflow`` trick), so each op is one compile
+# regardless of how many pages move.
+# ---------------------------------------------------------------------------
+
+
+def _is_kv_page_leaf(ps: str) -> bool:
+    return ps.endswith(".k_pages") or ps.endswith(".v_pages")
+
+
+def _leaf_batch_axis(ps: str) -> int:
+    return 1 if "['blocks']" in ps else 0
+
+
+def gather_kv_page_rows(state, slot):
+    """Read slot ``slot``'s k/v page rows out of the batched serve state.
+
+    Returns ``{path: (C, ...)}`` — one stacked array per paged k/v leaf,
+    page axis moved to the front. The engine device_gets this to archive
+    pages into the far store before zeroing them on device.
+    """
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        ps = jax.tree_util.keystr(path)
+        if not _is_kv_page_leaf(ps):
+            continue
+        ax = _leaf_batch_axis(ps)
+        row = jax.lax.dynamic_index_in_dim(leaf, slot, axis=ax,
+                                           keepdims=False)
+        out[ps] = jnp.moveaxis(row, ax + 1, 0)
+    return out
+
+
+def _update_kv_page_rows(state, slot, pages, value_fn):
+    """Scatter into slot ``slot``'s page rows at physical page indices
+    ``pages`` ((C,) int32, -1 padded). ``value_fn(path, ext, idx)``
+    writes into the page-fronted, overflow-extended view ``ext``
+    ((C+1, ...)); padded indices land on the overflow row, which is
+    sliced away. Non-k/v leaves pass through untouched."""
+
+    def upd(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if not _is_kv_page_leaf(ps):
+            return leaf
+        ax = _leaf_batch_axis(ps)
+        row = jax.lax.dynamic_index_in_dim(leaf, slot, axis=ax,
+                                           keepdims=False)
+        moved = jnp.moveaxis(row, ax + 1, 0)                # (C, ...)
+        c = moved.shape[0]
+        ext = jnp.concatenate(
+            [moved, jnp.zeros((1,) + moved.shape[1:], moved.dtype)], axis=0)
+        idx = jnp.where(pages >= 0, pages, c).astype(jnp.int32)
+        ext = value_fn(ps, ext, idx)
+        row2 = jnp.moveaxis(ext[:c], 0, ax + 1)
+        row2 = jnp.expand_dims(row2, ax)
+        start = (0,) * ax + (slot,) + (0,) * (leaf.ndim - ax - 1)
+        return jax.lax.dynamic_update_slice(leaf, row2.astype(leaf.dtype),
+                                            start)
+
+    return jax.tree_util.tree_map_with_path(upd, state)
+
+
+def spill_kv_page_rows(state, slot, pages):
+    """Zero the k/v contents of ``pages`` for slot ``slot`` (the cold
+    tier's device-side residue — zero is the empty-page sentinel, so a
+    spilled page is indistinguishable from an empty one to the kernels;
+    only the untouched metadata says otherwise)."""
+    return _update_kv_page_rows(
+        state, slot, pages, lambda ps, ext, idx: ext.at[idx].set(0))
+
+
+def fill_kv_page_rows(state, slot, pages, rows):
+    """Restore far-store rows into ``pages`` of slot ``slot``. ``rows``
+    is ``{path: (C, ...)}`` aligned with ``pages`` entry-wise (padding
+    entries carry zeros and land on the discarded overflow row). Exact
+    inverse of spill: the page contents return bit-identical."""
+    return _update_kv_page_rows(
+        state, slot, pages,
+        lambda ps, ext, idx: ext.at[idx].set(rows[ps].astype(ext.dtype)))
+
+
+class TieredPagedCache:
+    """Host-side residency controller for the two-tier paged KV cache.
+
+    Tracks, per engine slot, which **physical** pages are device-resident
+    (``resident`` bitmap) and archives spilled page rows in a host far
+    store (``far``) keyed ``(slot, phys_page) -> {path: np row}`` — the
+    simulated HB far bank (hbsim/sim.py costs the traffic). The policy
+    methods are pure bookkeeping over numpy; the device-side spill/fill
+    tree ops live next to it in this module and are dispatched by the
+    serving engine.
+
+    Residency policy (exactness-safe by construction):
+
+    * **Pinned (never spilled):** sink pages, every page at or above the
+      local-window start ``first_local(ctx)`` (local span + the current
+      append page + not-yet-written pages), and the currently selected
+      pages. Since ``first_local`` only grows with context, a page below
+      it is complete and will never be appended to or re-enter the local
+      window — the *only* way a spilled page is read again is via
+      selection, which is metadata-only and therefore miss-detectable.
+    * **Hot set:** pinned pages plus the ``hot_pages`` - |pinned| most
+      important spill candidates (the accumulated Quest hotness the
+      selector maintains). ``hot_pages`` is a soft per-slot budget: pins
+      may exceed it.
+    * **Refresh:** at each selection refresh the engine asks
+      ``plan_refresh`` for pages to prefetch (``to_fill`` — hot again
+      but cold on device; fetched one share window ahead of the next
+      selection) and pages to spill (``to_spill``).
+
+    Physical vs logical: ``stripe_shards`` > 1 applies the coplace_shmap
+    round-robin page striping (core/paging.interleave_slot); selection
+    indices and importance are already physical there, so the bitmap and
+    far store are kept in physical page space and only the sink/local
+    pins are mapped through the stripe.
+    """
+
+    def __init__(self, *, n_slots: int, n_pages: int, hot_pages: int,
+                 page_size: int, sink: int, local: int,
+                 stripe_shards: int = 1):
+        from repro.core import paging
+
+        self.n_slots = int(n_slots)
+        self.n_pages = int(n_pages)
+        self.hot_pages = int(hot_pages)
+        self.page_size = int(page_size)
+        self.sink = int(sink)
+        self.local = int(local)
+        self.stripe = max(int(stripe_shards), 1)
+        self.n_sink_pages, _ = paging.page_counts(
+            sink=sink, local=local, page=page_size)
+        self.resident = np.ones((self.n_slots, self.n_pages), bool)
+        self.far: dict = {}   # (slot, phys_page) -> {path: np row}
+
+    # -- page-space mapping -------------------------------------------
+    def phys(self, logical: int) -> int:
+        from repro.core import paging
+
+        if self.stripe == 1:
+            return int(logical)
+        return int(paging.interleave_slot(logical, self.n_pages,
+                                          self.stripe))
+
+    def first_local(self, ctx: int) -> int:
+        return max(int(ctx) - self.local, 0) // self.page_size
+
+    def data_pages(self, ctx: int) -> int:
+        return -(-int(ctx) // self.page_size)
+
+    # -- residency bookkeeping ----------------------------------------
+    def reset_slot(self, slot: int):
+        """Slot retired or (re)admitted: the next occupant's pack/reset
+        overwrites every device row, so the whole slot is resident."""
+        self.resident[slot] = True
+        for key in [k for k in self.far if k[0] == slot]:
+            del self.far[key]
+
+    def missing(self, slot: int, pages) -> list:
+        """Subset of physical ``pages`` not device-resident (the cold
+        misses of a fresh selection)."""
+        return [p for p in pages if not self.resident[slot, p]]
+
+    def store_rows(self, slot: int, pages, rows: dict):
+        """Archive gathered page rows (``{path: (C, ...)}``) into the far
+        store. Idempotent per page: a page already archived keeps its
+        copy (complete pages never change on device, so the copy stays
+        exact across spill/fill/spill cycles)."""
+        for p in pages:
+            if (slot, p) in self.far:
+                continue
+            self.far[(slot, p)] = {ps: np.asarray(buf[p]).copy()
+                                   for ps, buf in rows.items()}
+
+    # -- policy --------------------------------------------------------
+    def spill_candidates(self, slot: int, ctx: int, selected) -> list:
+        """Physical pages legal to spill: complete pages strictly between
+        the sink and local sections, minus ``selected``."""
+        fl = self.first_local(ctx)
+        return [self.phys(p) for p in range(self.n_sink_pages, fl)
+                if self.phys(p) not in selected]
+
+    def plan_refresh(self, slot: int, ctx: int, selected, hotness):
+        """(to_fill, to_spill) physical page lists for one refresh.
+
+        ``selected`` — the slot's fresh physical selection (already
+        resident: misses were repaired before this runs); ``hotness`` —
+        (n_pages,) accumulated importance in physical page space. The
+        want-set is pins ∪ top-m candidates by hotness, m sized so the
+        resident data pages meet the ``hot_pages`` budget."""
+        fl = self.first_local(ctx)
+        nd = self.data_pages(ctx)
+        cand = self.spill_candidates(slot, ctx, selected)
+        pinned_data = (min(self.n_sink_pages, nd) + max(nd - fl, 0)
+                       + len(selected))
+        m = max(self.hot_pages - pinned_data, 0)
+        order = sorted(cand, key=lambda p: (-float(hotness[p]), p))
+        want = set(order[:m])
+        to_fill = [p for p in order[:m] if not self.resident[slot, p]]
+        to_spill = [p for p in cand
+                    if p not in want and self.resident[slot, p]]
+        return to_fill, to_spill
 
 
 # ---------------------------------------------------------------------------

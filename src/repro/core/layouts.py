@@ -167,6 +167,14 @@ class LayoutPlan:
                        zero-recompile invariant under sharding).
     balance_shards   — shard count ``admission="balanced"`` scores
                        per-device page loads against (1 = FIFO).
+    page_stripe_shards — physical page→slot striping factor of the
+                       layout's paged cache (1 = physical page order is
+                       logical page order). coplace_shmap stripes pages
+                       round-robin over the mesh 'model' axis; the
+                       tiered-residency controller (core/cache.py
+                       TieredPagedCache) reads this so every registered
+                       layout inherits hot/cold page spilling with the
+                       correct physical pin mapping.
     """
 
     layout: str
@@ -174,10 +182,21 @@ class LayoutPlan:
     capacity_quantum: int = 1
     shard_state: bool = False
     balance_shards: int = 1
+    page_stripe_shards: int = 1
 
     def round_capacity(self, tokens: int) -> int:
         q = max(int(self.capacity_quantum), 1)
         return -(-int(tokens) // q) * q
+
+    def phys_page(self, logical: int, n_pages: int) -> int:
+        """Physical page slot of logical page ``logical`` under this
+        layout's striping (identity when ``page_stripe_shards == 1``)."""
+        from repro.core import paging
+
+        if self.page_stripe_shards <= 1:
+            return int(logical)
+        return int(paging.interleave_slot(logical, n_pages,
+                                          self.page_stripe_shards))
 
     def state_shardings(self, cfg, state, *, batch_size: int | None = None):
         """NamedSharding pytree for a batched serve state."""
@@ -460,6 +479,15 @@ class CoplaceShmapLayout(CoplaceLayout):
     decode bodies differ."""
 
     name = LAYOUT_COPLACE_SHMAP
+
+    def plan(self, cfg, mesh=None) -> LayoutPlan:
+        plan = super().plan(cfg, mesh)
+        # physical pages are striped round-robin over 'model'; the tiered
+        # residency controller needs the stripe to map its logical
+        # sink/local pins into physical page space (sel_idx/importance
+        # are already physical under this layout)
+        return dataclasses.replace(
+            plan, page_stripe_shards=int(plan.mesh.shape["model"]))
 
     @staticmethod
     def _ambient_shards() -> int:

@@ -169,6 +169,53 @@ def attention_decode(cfg: ArchConfig, seq: int, mode: str,
     }
 
 
+def far_bank_transfer(nbytes: float, hb: HBConfig = HBConfig(),
+                      *, hops: float | None = None) -> Dict:
+    """Cost of moving ``nbytes`` between a bank's near tier (its stacked
+    DRAM dies) and the far bank over the NoC — the hardware behind the
+    serving engine's hot/cold page residency (spills, demand fills and
+    prefetches; byte counts from runtime.perfmodel.tier_traffic_bytes).
+
+    Latency is NoC-link bound (12.8 GB/s/link << 204.8 GB/s near-memory
+    bandwidth); energy pays both memory endpoints (read source + write
+    destination) plus the per-hop NoC energy. ``hops`` defaults to the
+    mean Manhattan distance of the mesh grid — a documented assumption,
+    like the hop energy itself."""
+    if hops is None:
+        gx, gy = hb.grid
+        hops = (gx + gy) / 2.0
+    latency = nbytes / hb.noc_link_bw
+    energy = nbytes * (2 * hb.mem_energy_per_byte
+                       + hops * hb.noc_energy_per_byte_hop)
+    return {"latency_s": latency, "energy_j": energy, "hops": hops}
+
+
+def tiered_serving_overhead(cfg: ArchConfig, *, fills: int, spills: int,
+                            prefetch: int, decode_steps: int,
+                            hb: HBConfig = HBConfig()) -> Dict:
+    """Modeled far-bank overhead of a tiered serving run: converts the
+    engine's page counters into blocking (demand-fill) and overlapped
+    (prefetch + spill) transfer time and total energy, amortized per
+    decode step. The blocking share is the model's prediction of what
+    tiering costs when the prefetcher misses; the overlapped share rides
+    under decode and costs only energy."""
+    from repro.runtime import perfmodel
+
+    traffic = perfmodel.tier_traffic_bytes(
+        cfg, fills=fills, spills=spills, prefetch=prefetch)
+    blocking = far_bank_transfer(traffic["blocking"], hb)
+    overlapped = far_bank_transfer(traffic["total"] - traffic["blocking"],
+                                   hb)
+    steps = max(int(decode_steps), 1)
+    return {
+        "far_bytes": traffic["total"],
+        "blocking_s": blocking["latency_s"],
+        "overlapped_s": overlapped["latency_s"],
+        "energy_j": blocking["energy_j"] + overlapped["energy_j"],
+        "blocking_s_per_step": blocking["latency_s"] / steps,
+    }
+
+
 def gemm_decode(cfg: ArchConfig, hb: HBConfig = HBConfig()) -> Dict:
     """Non-attention (GEMM) cost of one decode token: weights are read
     once from the memory dies (batch=1 edge decode), compute on DCIM."""

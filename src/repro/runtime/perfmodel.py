@@ -114,6 +114,44 @@ def decode_bytes(cfg: ArchConfig, shape: ShapeConfig, mesh: MeshModel,
     return terms
 
 
+def tier_page_bytes(cfg: ArchConfig) -> float:
+    """Wire bytes of ONE logical KV page crossing the hot/cold residency
+    boundary (core/cache.TieredPagedCache spill or fill): K + V rows of
+    every retrieval head in every attention layer. Streaming heads keep
+    a ring, not pages, and page metadata (tau/importance/page_start)
+    never migrates — selection must stay metadata-complete on the hot
+    side for cold misses to be detectable."""
+    h2 = cfg.h2eal
+    hkv = cfg.num_kv_heads
+    nr = hkv - round(hkv * h2.static_sparsity) if h2.enabled else hkv
+    n_attn = len(cfg.attention_layers) or cfg.num_layers
+    return float(2 * h2.page_size * cfg.resolved_head_dim * BF16
+                 * nr * n_attn)
+
+
+def tier_traffic_bytes(cfg: ArchConfig, *, fills: int, spills: int,
+                       prefetch: int) -> dict:
+    """Far-bank traffic of a tiered-residency serving run, from the
+    engine's page counters (EngineStats.tier_fills/spills/prefetch).
+
+    ``blocking`` isolates the demand fills: a cold SELECTED page stalls
+    its select step until the fill lands, while prefetch and spill
+    traffic overlaps decode (scheduled one share window ahead of the
+    refresh that needs it). The hbsim far-bank link model
+    (hbsim.sim.far_bank_transfer) converts these bytes to time/energy.
+    """
+    page = tier_page_bytes(cfg)
+    terms = {
+        "demand_fills": fills * page,
+        "prefetch": prefetch * page,
+        "spills": spills * page,
+    }
+    terms["blocking"] = terms["demand_fills"]
+    terms["total"] = (terms["demand_fills"] + terms["prefetch"]
+                      + terms["spills"])
+    return terms
+
+
 def prefill_bytes(cfg: ArchConfig, shape: ShapeConfig, mesh: MeshModel,
                   *, q_chunk: int = 1024) -> dict:
     """Prefill step, per device: activations dominate; chunked attention

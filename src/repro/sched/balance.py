@@ -143,12 +143,21 @@ def slot_pages(ctx: int, page_size: int) -> int:
 
 
 def device_page_loads(ctx_lengths: Sequence[int], *, n_shards: int,
-                      page_size: int) -> List[int]:
+                      page_size: int,
+                      hot_cap: int | None = None) -> List[int]:
     """Per-device resident-page counts of a ragged batch under round-robin
-    (interleaved) page→device striping."""
+    (interleaved) page→device striping.
+
+    ``hot_cap`` models tiered residency (core/cache.TieredPagedCache): a
+    slot keeps at most ``hot_cap`` pages device-resident regardless of
+    its context length — cold pages live in the far store and cost no
+    device memory — so admission under a tiered engine scores hot-set
+    size, not total pages."""
     loads = [0] * n_shards
     for ctx in ctx_lengths:
         pages = slot_pages(ctx, page_size)
+        if hot_cap is not None:
+            pages = min(pages, int(hot_cap))
         q, r = divmod(pages, n_shards)
         for d in range(n_shards):
             loads[d] += q + (1 if d < r else 0)
@@ -212,10 +221,14 @@ def load_imbalance(vals: Sequence[float]) -> float:
 
 
 def admission_score(ctx_lengths: Sequence[int], candidate_ctx: int, *,
-                    n_shards: int, page_size: int) -> float:
+                    n_shards: int, page_size: int,
+                    hot_cap: int | None = None) -> float:
     """Per-device page-load imbalance of the batch AFTER admitting a
     request at context ``candidate_ctx`` next to the live ``ctx_lengths``.
-    Lower is better; the engine admits the queued request minimizing it."""
+    Lower is better; the engine admits the queued request minimizing it.
+    Under a tiered engine ``hot_cap`` caps each slot's scored pages at
+    the device-resident hot-set size (see ``device_page_loads``)."""
     loads = device_page_loads(list(ctx_lengths) + [int(candidate_ctx)],
-                              n_shards=n_shards, page_size=page_size)
+                              n_shards=n_shards, page_size=page_size,
+                              hot_cap=hot_cap)
     return load_imbalance(loads)

@@ -126,6 +126,12 @@ class EngineStats:
     occupancy_sum: float = 0.0   # sum over steps of live-slot fraction
     wall_s: float = 0.0          # set by run()
     admission_reorders: int = 0  # balanced admission: non-FIFO picks
+    # tiered residency (Engine(hot_pages=N); all counts are PAGES):
+    tier_hits: int = 0           # selected pages found device-resident
+    tier_misses: int = 0         # selected pages cold — filled + replayed
+    tier_spills: int = 0         # pages archived to the far store
+    tier_fills: int = 0          # demand fills (miss repair)
+    tier_prefetch: int = 0       # speculative fills one window ahead
 
     @property
     def prefills(self) -> int:
@@ -142,6 +148,11 @@ class EngineStats:
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def tier_hit_rate(self) -> float:
+        seen = self.tier_hits + self.tier_misses
+        return self.tier_hits / seen if seen else 1.0
+
 
 @dataclasses.dataclass
 class BatchState:
@@ -149,14 +160,17 @@ class BatchState:
 
     ``serve`` is the device pytree (per-slot caches + (B,) length);
     the numpy arrays mirror per-slot scheduling metadata the host loop
-    needs without device round-trips. A slot is in exactly one of three
-    phases: FREE (neither mask set), PREFILLING (``prefilling``; length
-    counts prompt tokens fed so far), or DECODING (``active``).
+    needs without device round-trips. A slot is in exactly one of four
+    phases: FREE (no mask set), PREFILLING (``prefilling``; length
+    counts prompt tokens fed so far), READY (``ready``; prompt done and
+    first token emitted, waiting for the batch's shared refresh
+    boundary), or DECODING (``active``).
     """
 
     serve: dict                  # model serve state, length: (B,) int32
     active: np.ndarray           # (B,) bool — decoding slots
     prefilling: np.ndarray       # (B,) bool — chunked-prefill slots
+    ready: np.ndarray            # (B,) bool — awaiting phase-aligned start
     lengths: np.ndarray          # (B,) int64 — host mirror of serve length
     phase: np.ndarray            # (B,) int64 — decode steps since admission
     uid: np.ndarray              # (B,) int64 — -1 when free
@@ -169,7 +183,8 @@ class BatchState:
 
     def free_slots(self) -> List[int]:
         return [i for i in range(self.max_batch)
-                if not self.active[i] and not self.prefilling[i]]
+                if not self.active[i] and not self.prefilling[i]
+                and not self.ready[i]]
 
 
 def jit_cache_size(fn) -> int:
@@ -274,7 +289,20 @@ class Engine:
                   at the first ``admit_lookahead`` queued requests and
                   admits the one that keeps per-device page load most
                   balanced (sched/balance.admission_score; the paper's
-                  §IV-C balancing applied to the batch dimension).
+                  §IV-C balancing applied to the batch dimension). Under
+                  a tiered engine the score caps each slot's pages at
+                  ``hot_pages`` — admission scores hot-set size, not
+                  total pages.
+    hot_pages   : per-slot device-resident page budget enabling TIERED
+                  residency (None = all-resident). Cold pages spill to
+                  the host far store (the simulated HB far bank); the
+                  engine prefetches the hottest cold pages one share
+                  window ahead of each selection refresh, detects
+                  selected-but-cold pages via the metadata-only
+                  selection, and serves them late (fill + replay) —
+                  token traces are bit-identical to the all-resident
+                  engine (docs/serving.md §Tiered residency). Counted
+                  in ``EngineStats.tier_*``.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
@@ -283,7 +311,8 @@ class Engine:
                  mesh=None, admission: str = "fifo",
                  admit_lookahead: int = 4,
                  balance_shards: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 hot_pages: Optional[int] = None):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
 
@@ -333,6 +362,7 @@ class Engine:
         # compiled program — for the chunk/reset admission ops too.
         dec_shard = {}
         reset_shard = {}
+        self.hot_pages = int(hot_pages) if hot_pages else None
         # _pack_slot/_reset_slot are module-level, and jax.jit keys its
         # cache on the wrapped callable: jitting them directly would share
         # one cache across every Engine in the process, so another
@@ -356,12 +386,22 @@ class Engine:
                                  out_shardings=ss)
         else:
             self._pack = jax.jit(_pack_fn, donate_argnums=(0,))
+        # tiered mode keeps the select step's INPUT state alive: the
+        # engine may have to fill cold-missed pages into it and replay
+        # the same step (miss repair), so the select jit must not donate.
+        # Reuse steps never miss (every page a reuse step reads is
+        # pinned resident), so they keep the donation.
+        sel_donate = {} if self.hot_pages else {"donate_argnums": (1,)}
         self._dec_sel = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=True),
-            donate_argnums=(1,), **dec_shard)
+            **sel_donate, **dec_shard)
         self._dec_reuse = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=False),
             donate_argnums=(1,), **dec_shard)
+        self._tier = None
+        self._tier_plan = None       # pending (need, sel, hotness) refresh
+        if self.hot_pages is not None:
+            self._init_tier(reset_shard)
         if self.prefill_chunk is not None:
             self._chunk = jax.jit(
                 serve_rt.make_prefill_chunk_step(
@@ -414,12 +454,217 @@ class Engine:
             serve=serve,
             active=np.zeros((max_batch,), bool),
             prefilling=np.zeros((max_batch,), bool),
+            ready=np.zeros((max_batch,), bool),
             lengths=np.zeros((max_batch,), np.int64),
             phase=np.zeros((max_batch,), np.int64),
             uid=np.full((max_batch,), -1, np.int64),
             remaining=np.zeros((max_batch,), np.int64),
             prompt_left=np.zeros((max_batch,), np.int64),
         )
+
+    # ------------------------------------------------------------------
+    # tiered residency (hot/cold KV pages; core/cache.TieredPagedCache)
+    # ------------------------------------------------------------------
+
+    def _init_tier(self, reset_shard: dict):
+        from repro.core import cache as cachelib
+
+        flat = jax.tree_util.tree_flatten_with_path(self.batch.serve)[0]
+        kv = [(jax.tree_util.keystr(p), leaf) for p, leaf in flat
+              if jax.tree_util.keystr(p).endswith(".k_pages")]
+        if not kv:
+            raise ValueError(
+                "hot_pages tiering requires a paged retrieval-head cache; "
+                "this config's serve state has no k_pages leaves")
+        ps, leaf = kv[0]
+        n_pages = leaf.shape[cachelib._leaf_batch_axis(ps) + 2]
+        if not 1 <= self.hot_pages <= n_pages:
+            raise ValueError(
+                f"hot_pages={self.hot_pages} must be in [1, {n_pages}] "
+                f"(cache capacity {self.cache_capacity} holds {n_pages} "
+                f"pages of {self.cfg.h2eal.page_size})")
+        h2 = self.cfg.h2eal
+        self._tier = cachelib.TieredPagedCache(
+            n_slots=self.batch.max_batch, n_pages=n_pages,
+            hot_pages=self.hot_pages, page_size=h2.page_size,
+            sink=h2.sink, local=h2.local,
+            stripe_shards=self.plan.page_stripe_shards)
+
+        # per-instance wrappers: keep each engine's jit caches private
+        # (the _pack_fn rationale above)
+        def _gather_fn(state, slot):
+            return cachelib.gather_kv_page_rows(state, slot)
+
+        def _spill_fn(state, slot, pages):
+            return cachelib.spill_kv_page_rows(state, slot, pages)
+
+        def _fill_fn(state, slot, pages, rows):
+            return cachelib.fill_kv_page_rows(state, slot, pages, rows)
+
+        self._tier_gather = jax.jit(_gather_fn)
+        self._tier_spill = jax.jit(_spill_fn, donate_argnums=(0,),
+                                   **reset_shard)
+        self._tier_fill = jax.jit(_fill_fn, donate_argnums=(0,),
+                                  **reset_shard)
+
+    def _tier_digest(self, serve, need: np.ndarray):
+        """Read back the fresh selection + accumulated page hotness for
+        the slots that refreshed this step (one device_get per select
+        step — the only host sync tiering adds). Returns
+        ``(sel_by_slot, hot_by_slot)``: physical page-index sets and
+        (n_pages,) importance sums, summed over layers and heads."""
+        t = self._tier
+        flat = jax.tree_util.tree_flatten_with_path(serve)[0]
+        sel_leaves, imp_leaves = {}, {}
+        for path, leaf in flat:
+            ps = jax.tree_util.keystr(path)
+            if ps.endswith(".sel_idx"):
+                sel_leaves[ps] = leaf
+            elif ps.endswith(".importance"):
+                imp_leaves[ps] = leaf
+        got_sel, got_imp = jax.device_get((sel_leaves, imp_leaves))
+        sel_by, hot_by = {}, {}
+        for slot in np.nonzero(need)[0]:
+            slot = int(slot)
+            sel: set = set()
+            for ps, a in got_sel.items():
+                ax = 1 if "['blocks']" in ps else 0
+                v = np.moveaxis(a, ax, 0)[slot]
+                sel.update(int(x) for x in v.ravel()
+                           if 0 <= x < t.n_pages)
+            hot = np.zeros((t.n_pages,), np.float64)
+            for ps, a in got_imp.items():
+                ax = 1 if "['blocks']" in ps else 0
+                v = np.moveaxis(a, ax, 0)[slot]
+                hot += np.asarray(v, np.float64).reshape(-1, t.n_pages
+                                                         ).sum(axis=0)
+            sel_by[slot], hot_by[slot] = sel, hot
+        return sel_by, hot_by
+
+    def _tier_fill_pages(self, serve, slot: int, pages, *, prefetch: bool):
+        """Restore far-store rows for ``pages`` onto the device (demand
+        fill on a cold miss, or speculative prefetch one share window
+        ahead). Every filled page was spilled earlier, so its rows are
+        in the far store by construction."""
+        t = self._tier
+        pages = [int(p) for p in pages]
+        parr = np.full((t.n_pages,), -1, np.int32)
+        parr[:len(pages)] = pages
+        template = t.far[(slot, pages[0])]
+        rows = {ps: np.zeros((t.n_pages,) + r.shape, r.dtype)
+                for ps, r in template.items()}
+        for i, p in enumerate(pages):
+            for ps, r in t.far[(slot, p)].items():
+                rows[ps][i] = r
+        serve = self._tier_fill(
+            serve, jnp.int32(slot), jnp.asarray(parr),
+            {ps: jnp.asarray(v) for ps, v in rows.items()})
+        t.resident[slot, pages] = True
+        if prefetch:
+            self.stats.tier_prefetch += len(pages)
+        else:
+            self.stats.tier_fills += len(pages)
+        return serve
+
+    def _tier_spill_pages(self, serve, slot: int, pages):
+        """Archive ``pages`` to the far store (first spill of a page
+        gathers its rows off device; later spills reuse the archived
+        copy — complete pages never change) and zero them on device."""
+        t = self._tier
+        pages = [int(p) for p in pages]
+        to_gather = [p for p in pages if (slot, p) not in t.far]
+        if to_gather:
+            rows = jax.device_get(self._tier_gather(serve,
+                                                    jnp.int32(slot)))
+            t.store_rows(slot, to_gather, rows)
+        parr = np.full((t.n_pages,), -1, np.int32)
+        parr[:len(pages)] = pages
+        serve = self._tier_spill(serve, jnp.int32(slot), jnp.asarray(parr))
+        t.resident[slot, pages] = False
+        self.stats.tier_spills += len(pages)
+        return serve
+
+    def _tier_select(self, need: np.ndarray, need_dev, act_dev):
+        """Tiered select step: dispatch (non-donated), read back the
+        metadata-only selection, and — if any selected page is cold —
+        fill it into the PRESERVED input state and replay the step.
+        Selection depends only on tau metadata + page_start + q (never
+        page contents), so the replayed selection is identical and the
+        replayed attention is exactly the all-resident step: the miss is
+        served late, never skipped."""
+        b = self.batch
+        logits, serve2 = self._dec_sel(self.params, b.serve, self._tok,
+                                       act_dev, need_dev)
+        sel_by, hot_by = self._tier_digest(serve2, need)
+        miss_work = []
+        for slot in np.nonzero(need)[0]:
+            slot = int(slot)
+            missing = self._tier.missing(slot, sel_by[slot])
+            self.stats.tier_hits += len(sel_by[slot]) - len(missing)
+            self.stats.tier_misses += len(missing)
+            if missing:
+                miss_work.append((slot, missing))
+        if miss_work:
+            serve = b.serve
+            for slot, missing in miss_work:
+                serve = self._tier_fill_pages(serve, slot, missing,
+                                              prefetch=False)
+            b.serve = serve
+            logits, serve2 = self._dec_sel(self.params, serve, self._tok,
+                                           act_dev, need_dev)
+        self._tier_plan = (need.copy(), sel_by, hot_by)
+        return logits, serve2
+
+    def _tier_refresh(self):
+        """Post-step residency refresh for the slots that just selected:
+        prefetch the hottest cold pages (one share window ahead of their
+        NEXT selection) and spill resident candidates that fell out of
+        the hot set."""
+        need, sel_by, hot_by = self._tier_plan
+        self._tier_plan = None
+        b = self.batch
+        for slot in np.nonzero(need)[0]:
+            slot = int(slot)
+            if not b.active[slot]:          # retired this step
+                continue
+            to_fill, to_spill = self._tier.plan_refresh(
+                slot, int(b.lengths[slot]), sel_by[slot], hot_by[slot])
+            if to_fill:
+                b.serve = self._tier_fill_pages(b.serve, slot, to_fill,
+                                                prefetch=True)
+            if to_spill:
+                b.serve = self._tier_spill_pages(b.serve, slot, to_spill)
+
+    def tier_force_spill(self, uid: int) -> int:
+        """Test/chaos hook: spill EVERY complete non-sink page of
+        ``uid``'s slot — including the currently selected ones — so the
+        slot's next selection refresh is guaranteed to cold-miss. Only
+        legal when that refresh is the slot's next decode step
+        (``phase % w == 0``): between refreshes the current selection is
+        read by reuse steps, which must never see a cold page. Returns
+        the number of pages spilled."""
+        if self._tier is None:
+            raise ValueError("tier_force_spill requires Engine(hot_pages=N)")
+        slots = [s for s, c in self._live.items() if c.uid == uid]
+        if not slots:
+            raise ValueError(f"uid {uid} is not live")
+        slot = slots[0]
+        b = self.batch
+        if not b.active[slot]:
+            raise ValueError(f"uid {uid} is not decoding yet")
+        if b.phase[slot] % self.share_window != 0:
+            raise ValueError(
+                "tier_force_spill is only legal at a selection boundary "
+                f"(slot phase {int(b.phase[slot])} % "
+                f"{self.share_window} != 0)")
+        t = self._tier
+        pages = [p for p in t.spill_candidates(slot, int(b.lengths[slot]),
+                                               selected=set())
+                 if t.resident[slot, p]]
+        if pages:
+            with self._mesh_ctx():
+                b.serve = self._tier_spill_pages(b.serve, slot, pages)
+        return len(pages)
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -456,17 +701,22 @@ class Engine:
         return comp
 
     def _admit_one(self, req: Request, slot: int):
-        """Packed admission: batch-1 prefill + pack; the slot decodes
-        from the next step and its first token is already emitted."""
+        """Packed admission: batch-1 prefill + pack; the slot's first
+        token is already emitted and it enters READY — it starts
+        decoding at the batch's next shared refresh boundary
+        (``_promote_ready``), so every active slot's phase stays aligned
+        mod the share window."""
         prompt = jnp.asarray(np.asarray(req.prompt)[None])  # (1, S)
         with self._mesh_ctx():
             logits, small = self._prefill(self.params, prompt)
             self.batch.serve = self._pack(self.batch.serve, small,
                                           jnp.int32(slot))
+        if self._tier is not None:
+            self._tier.reset_slot(slot)   # pack rewrote every device row
         first = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         self._tok = self._tok.at[slot].set(first)
         b = self.batch
-        b.active[slot] = True
+        b.ready[slot] = True
         b.lengths[slot] = len(req.prompt)
         b.phase[slot] = 0          # select on the slot's first decode step
         b.uid[slot] = req.uid
@@ -489,6 +739,8 @@ class Engine:
         b = self.batch
         with self._mesh_ctx():
             b.serve = self._reset(b.serve, jnp.int32(slot))
+        if self._tier is not None:
+            self._tier.reset_slot(slot)   # reset cleared every device row
         b.prefilling[slot] = True
         b.lengths[slot] = 0
         b.phase[slot] = 0
@@ -500,12 +752,14 @@ class Engine:
 
     def _finish_prefill(self, slot: int, chunk_logits):
         """The chunk that just ran completed this slot's prompt: emit the
-        first token from its logits row and flip the slot to DECODING."""
+        first token from its logits row and flip the slot to READY — it
+        starts decoding at the batch's next shared refresh boundary
+        (``_promote_ready``), keeping all active phases aligned."""
         b = self.batch
         b.prefilling[slot] = False
         first = jnp.argmax(chunk_logits[slot], axis=-1).astype(jnp.int32)
         self._tok = self._tok.at[slot].set(first)
-        b.active[slot] = True
+        b.ready[slot] = True
         b.phase[slot] = 0          # select on the slot's first decode step
         comp = self._live[slot]
         comp._first_tok = first
@@ -519,8 +773,11 @@ class Engine:
     def _retire(self, slot: int):
         b = self.batch
         b.active[slot] = False
+        b.ready[slot] = False
         b.uid[slot] = -1
         b.remaining[slot] = 0
+        if self._tier is not None:
+            self._tier.reset_slot(slot)   # next occupant rewrites the rows
         comp = self._live.pop(slot)
         comp.finished_step = self.stats.decode_steps
         self.completions[comp.uid] = comp
@@ -543,12 +800,13 @@ class Engine:
         # occupy its full page span within ceil(S/chunk) steps
         live = [int(b.lengths[i]) + int(b.prompt_left[i])
                 for i in range(b.max_batch)
-                if b.active[i] or b.prefilling[i]]
+                if b.active[i] or b.prefilling[i] or b.ready[i]]
         best_i, best_s = 0, None
         for i in range(min(self.admit_lookahead, len(self._queue))):
             s = balance.admission_score(
                 live, len(self._queue[i].prompt), n_shards=n_shards,
-                page_size=self.cfg.h2eal.page_size)
+                page_size=self.cfg.h2eal.page_size,
+                hot_cap=self.hot_pages)
             if best_s is None or s < best_s - 1e-12:
                 best_i, best_s = i, s
         if best_i == 0:
@@ -602,6 +860,26 @@ class Engine:
             clens[i] = n
         return tokens, clens
 
+    def _promote_ready(self):
+        """Activate READY slots only when every active slot sits at its
+        refresh boundary (``phase % w == 0``) — or the batch is empty.
+        Newly activated slots start at phase 0, so inductively ALL
+        active slots share one phase residue mod the share window: the
+        ``select`` decode variant dispatches on ~1/w of decode steps
+        instead of nearly every step under staggered phases (the PR-5
+        select-dispatch regression; ROADMAP). A slot's own schedule
+        still depends only on its own phase — no global clock enters any
+        slot's trajectory, so token traces are unchanged; admission is
+        merely delayed by at most w-1 steps."""
+        b = self.batch
+        if not b.ready.any():
+            return
+        act = b.active
+        if act.any() and (b.phase[act] % self.share_window).any():
+            return
+        b.active |= b.ready
+        b.ready[:] = False
+
     def step(self):
         """One engine step (non-blocking): feed a prompt chunk to the
         prefilling slots AND run one batched ragged decode over the
@@ -609,6 +887,7 @@ class Engine:
         prompt completes this step emits its first token from the chunk
         logits and starts decoding next step."""
         b = self.batch
+        self._promote_ready()
         chunk_work = (self._schedule_chunks()
                       if self.prefill_chunk is not None else None)
         active = b.active.copy()
@@ -645,9 +924,13 @@ class Engine:
             self._act_mirror = active.copy()
         act_dev = self._act_dev
         if need.any():
-            logits, b.serve = self._dec_sel(
-                self.params, b.serve, self._tok, act_dev,
-                jnp.asarray(need))
+            need_dev = jnp.asarray(need)
+            if self._tier is not None:
+                logits, b.serve = self._tier_select(need, need_dev,
+                                                    act_dev)
+            else:
+                logits, b.serve = self._dec_sel(
+                    self.params, b.serve, self._tok, act_dev, need_dev)
             self.stats.select_steps += 1
         else:
             logits, b.serve = self._dec_reuse(
@@ -673,6 +956,10 @@ class Engine:
             b.remaining[slot] -= 1
             if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
                 self._retire(slot)
+        if self._tier_plan is not None:
+            # prefetch/spill for the NEXT share window, one window ahead
+            # of the selection refresh that will consume the pages
+            self._tier_refresh()
 
     def finalize(self):
         """Materialize completion tokens from the device-side trace.
@@ -691,9 +978,10 @@ class Engine:
 
     def busy(self) -> bool:
         """True while any work is pending: queued requests, prefilling
-        slots, or decoding slots."""
+        slots, ready slots, or decoding slots."""
         return (bool(self._queue) or bool(self.batch.active.any())
-                or bool(self.batch.prefilling.any()))
+                or bool(self.batch.prefilling.any())
+                or bool(self.batch.ready.any()))
 
     def poll(self) -> bool:
         """Admit whatever fits, then run one engine step — the unit of
@@ -759,4 +1047,8 @@ class Engine:
         if self.prefill_chunk is not None:
             sizes["prefill_chunk"] = jit_cache_size(self._chunk)
             sizes["reset"] = jit_cache_size(self._reset)
+        if self.hot_pages is not None:
+            sizes["tier_gather"] = jit_cache_size(self._tier_gather)
+            sizes["tier_spill"] = jit_cache_size(self._tier_spill)
+            sizes["tier_fill"] = jit_cache_size(self._tier_fill)
         return sizes

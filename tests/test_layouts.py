@@ -7,6 +7,10 @@ exactness vs the ``default`` layout, slot-churn invariance, and the
 zero-recompile invariant — so any future ``register_layout()`` entry
 gets its conformance tests for free.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +20,7 @@ from repro.configs import get_arch, reduced
 from repro.core import layouts as layoutlib
 from repro.models import model as M
 from repro.serving import Engine, Request
-from tests.test_serving import CAP, _mixed_workload
+from tests.test_serving import CAP, REPO, _mixed_workload
 
 LAYOUTS = layoutlib.available_layouts()
 
@@ -253,6 +257,30 @@ def test_layout_conformance_chunked(model, default_trace, name):
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
 
 
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_tiered(model, default_trace, name):
+    """Tiered-residency conformance, for free per registry entry: the
+    engine with ``hot_pages`` set spills/prefetches cold KV pages
+    through the layout's residency plan (LayoutPlan.page_stripe_shards
+    maps logical pins to physical pages under striped layouts) and must
+    emit the ALL-RESIDENT default-layout token trace bit-identically,
+    with zero post-warmup recompiles. Future layouts inherit this sweep
+    the moment they register."""
+    cfg, params = model
+    _, mixed_ref, _ = default_trace
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name, hot_pages=4)
+    mixed = eng.run(_mixed_workload(cfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    sizes0 = eng.jit_cache_sizes()
+    assert {"tier_gather", "tier_spill", "tier_fill"} <= set(sizes0), name
+    eng.reset_metrics()
+    eng.run(_mixed_workload(cfg, seed=11, n=2))
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
 @pytest.fixture(scope="module")
 def hybrid_model():
     """An attention+mamba2 hybrid: the recurrent chunk-resume path must
@@ -286,3 +314,59 @@ def test_layout_conformance_chunked_recurrent(hybrid_model, name):
     eng.reset_metrics()
     eng.run(_mixed_workload(cfg, seed=11, n=2))
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
+# ---------------------------------------------------------------------------
+# Tiered residency under real sharding (8-fake-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+TIERED_SHMAP_CODE = """
+import dataclasses
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serving import Engine
+from tests.test_tiered import CAP, _workload
+
+cfg = reduced(get_arch("smollm-360m"))
+cfg = dataclasses.replace(cfg, h2eal=dataclasses.replace(
+    cfg.h2eal, local=8, select_budget=16))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+# CAP=128 -> 16 pages over 8 shards: the physical striping is genuinely
+# permuted (logical page p lives at (p % 8) * 2 + p // 8), so the tier
+# bitmap, spills, and prefetches all run in remapped page space
+eng0 = Engine(cfg, params, max_batch=2, capacity=CAP, prompt_buckets=[64])
+c0 = eng0.run(_workload(cfg, 0))
+eng1 = Engine(cfg, params, max_batch=2, capacity=CAP, prompt_buckets=[64],
+              layout="coplace_shmap", hot_pages=6)
+assert eng1.plan.page_stripe_shards == 8
+c1 = eng1.run(_workload(cfg, 0))
+assert sorted(c0) == sorted(c1)
+for uid in sorted(c0):
+    assert c0[uid].tokens == c1[uid].tokens, (
+        uid, c0[uid].tokens, c1[uid].tokens)
+assert eng1.stats.tier_spills > 0, "tiering never spilled"
+sizes0 = eng1.jit_cache_sizes()
+eng1.reset_metrics()
+eng1.run(_workload(cfg, 1))
+assert eng1.jit_cache_sizes() == sizes0, (sizes0, eng1.jit_cache_sizes())
+print("TIERED_SHMAP_EXACT")
+"""
+
+
+@pytest.mark.slow
+def test_layout_tiered_coplace_shmap_8dev():
+    """8-fake-device subprocess: the TIERED coplace_shmap engine — tier
+    residency tracked in the striped physical page space — is
+    token-exact vs the all-resident default-layout engine, actually
+    spills, and never recompiles after warmup."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", TIERED_SHMAP_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=520, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "TIERED_SHMAP_EXACT" in out.stdout

@@ -145,6 +145,32 @@ def test_no_recompiles_across_arrival_patterns(model):
     assert eng.jit_cache_sizes() == sizes0
 
 
+def test_select_dispatch_rate_stays_aligned(model):
+    """The PR-5 select-dispatch regression, pinned: slots admitted at
+    arbitrary times must NOT stagger the batch's refresh phases. READY
+    slots join only at a shared refresh boundary (Engine._promote_ready)
+    and every slot starts at phase 0, so all active phases share one
+    residue mod the share window and the ``select`` decode variant
+    dispatches on ~1/w of decode steps — not nearly every step. Each
+    slot's own schedule depends only on its own phase, so token traces
+    are unchanged (covered by the churn-invariance tests)."""
+    cfg, params = model
+    w = cfg.h2eal.share_window
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24])
+    eng.run([Request(uid=i, prompt=_prompt(cfg, [16, 24][i % 2], i),
+                     max_new=12) for i in range(4)])
+    s = eng.stats
+    assert s.select_steps + s.reuse_steps == s.decode_steps
+    # aligned phases: one select per w decode steps, plus at most one
+    # boundary re-select per admission batch when a join restarts the
+    # residue (staggered phases would push this toward decode_steps)
+    assert s.select_steps <= s.decode_steps // w + s.admissions + 1, (
+        s.select_steps, s.decode_steps, s.admissions)
+    assert s.reuse_steps >= s.decode_steps // 2 - s.admissions - 1, (
+        s.reuse_steps, s.decode_steps)
+
+
 def test_serve_cli_ragged_smoke():
     """launch/serve.py --workload ragged runs on the CPU reduced config."""
     from repro.launch.serve import main
