@@ -52,14 +52,24 @@ BANDS = os.path.join(REPO, "benchmarks", "bench_bands.json")
 
 BANDED = ("tokens_per_s", "ttft_p50_s", "ttft_p99_s")
 EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref",
-              "tokens_match_resident")
+              "tokens_match_resident", "tokens_match_nonspec")
 
 
 def row_key(row):
+    # sampled / speculative rows (PR 8) select their own compiled
+    # configuration (sample + verify jits), so they key separately:
+    # "greedy" vs "t<temp>,p<top_p>", spec-k, and the dedicated
+    # ngram-friendly gate workload vs the default random one
+    samp = row.get("sampling")
+    samp_key = (f"t{samp['temperature']},p{samp['top_p']}" if samp
+                else "greedy")
     return "|".join([row["mode"], row["layout"], row["impl"],
                      f"chunk{row.get('prefill_chunk', 0)}",
                      row.get("admission_mode", "-"),
-                     row.get("tier", "-")])
+                     row.get("tier", "-"),
+                     samp_key,
+                     f"spec{row.get('spec_tokens', 0)}",
+                     f"wl:{row.get('workload', 'default')}"])
 
 
 def check(bench_path=BENCH, bands_path=BANDS):
@@ -156,6 +166,13 @@ def append_trend(trend_path, bench_path=BENCH):
             "hot_pages", "oversubscription", "tier_hit_rate",
             "tier_hits", "tier_misses", "tier_spills", "tier_fills",
             "tier_prefetch", "tokens_match_resident") if k in tiered}
+    spec = next((r for r in bench["rows"]
+                 if r.get("workload") == "ngram" and r.get("spec_tokens")),
+                None)
+    if spec is not None:
+        entry["spec"] = {k: spec[k] for k in (
+            "spec_tokens", "draft", "mean_accepted_len", "steps_per_s",
+            "speedup_vs_nonspec", "tokens_match_nonspec") if k in spec}
     lines = []
     if os.path.exists(trend_path):
         with open(trend_path) as f:

@@ -25,19 +25,25 @@ if [[ "${FAST:-0}" != "1" ]]; then
   # serve-throughput smoke: machine-readable perf rows (tok/s per
   # layout x impl x admission mode, occupancy, recompile flags, the
   # ref-vs-pallas comparison rows, the poisson-arrival TTFT/ITL
-  # latency rows with the packed-vs-chunked prefill comparison, and
-  # the tiered-residency row pair at 2x oversubscribed page capacity)
+  # latency rows with the packed-vs-chunked prefill comparison, the
+  # tiered-residency row pair at 2x oversubscribed page capacity, and
+  # the sampling + speculative-decode rows: stochastic non-spec,
+  # greedy + sampled spec (tokens_match_nonspec exact via the coupled
+  # rejection sampler), and the ngram-friendly workload pair carrying
+  # the spec >= non-spec tokens/s ratio gate)
   # -> BENCH_serve.json, held against the committed bands
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
       --prefill-chunk 8 --arrival poisson --attn-impl pallas \
-      --tiered-hot-pages 9 --json BENCH_serve.json
+      --tiered-hot-pages 9 --spec-tokens 4 --sampling 0.8,0.9 \
+      --json BENCH_serve.json
   # perf gate: tokens/s and TTFT within the committed bands
   # (benchmarks/bench_bands.json), recompile flags and chunked/pallas/
-  # tiered token-match flags exact, chunked-vs-packed and
-  # tiered-vs-resident throughput ratio floors; on success, append this
-  # commit's row to the cross-PR perf trajectory
+  # tiered/speculative token-match flags exact, chunked-vs-packed,
+  # tiered-vs-resident and speculative-vs-nonspec throughput ratio
+  # floors; on success, append this commit's row to the cross-PR perf
+  # trajectory
   python scripts/check_bench.py --append-trend benchmarks/bench_trend.jsonl
   # ragged serving smoke rows on 8 fake devices, one per sharded layout
   # registry entry (coplace_shmap = shard_map partial attention;

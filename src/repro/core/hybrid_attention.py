@@ -366,6 +366,152 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Speculative verify (PR 8): k decode steps in one chunked forward
+# ---------------------------------------------------------------------------
+
+
+def chunk_verify_attention(
+    spec: AttnSpec,
+    q: Array,                  # (B, k, Hq, D) roped at start .. start+k-1
+    k_new: Array,              # (B, k, Hkv, D) roped
+    v_new: Array,              # (B, k, Hkv, D)
+    paged: cachelib.PagedCache,
+    stream: cachelib.StreamCache,
+    start: Array,              # (B,) context length BEFORE the chunk
+    active: Array | None = None,
+    need_select: Array | None = None,
+    *,
+    perm: Array | None = None,
+    phys_shards: int = 1,
+):
+    """Verify k drafted tokens: each chunk query attends exactly what its
+    sequential decode step would, WITHOUT mutating the KV pages or the
+    stream ring (attend-before-append — acceptance decides how much of the
+    chunk ``chunk_verify_append`` later commits, so no rollback of the
+    non-invertible tau scatter-min/max is ever needed). Returns
+    (out (B, k, Hq, D), paged', stream) where paged' carries only the
+    refreshed selection / importance (gated by ``need_select & active``;
+    gated-off slots keep them bit-stable, exactly a reuse step).
+
+    Selection is scored once per chunk with query 0 at context start+1 —
+    the same query, context, and (because the page receiving position
+    start is never selectable) the same tau metadata the sequential select
+    step uses, so the refreshed selection is bitwise that of the
+    sequential engine; max_emit clamping in the engine guarantees no
+    share-window boundary falls inside a chunk. Keys come from the
+    gathered [sink | selected | local] buffer (per-query sectioning via
+    paging.verify_token_validity) concatenated with the chunk's own keys
+    under a causal triangle. ``phys_shards`` > 1 maps the fixed sections
+    through the coplace_shmap physical page order; scoring and top-k read
+    physical-order metadata directly (page_start carries absolute
+    positions), so this single program is layout-transparent, like
+    chunk_prefill_attention.
+    """
+    h2 = spec.h2
+    g = spec.group
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    qp = _permute_q(q, perm, g)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    b, kch = q.shape[0], q.shape[1]
+    act = jnp.ones((b,), bool) if active is None else \
+        jnp.asarray(active).reshape(b)
+    need = jnp.ones((b,), bool) if need_select is None else \
+        jnp.asarray(need_select).reshape(b)
+    start = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+    pos_q = paging.chunk_positions(start, kch)              # (B, k)
+    ctx1 = start + 1
+
+    outs = []
+    if nr > 0:
+        q_r = qp[:, :, : nr * g]                            # (B, k, HqR, D)
+        k_r = kp[:, :, :nr]
+        v_r = vp[:, :, :nr]
+        scores = paging.score_pages(
+            q_r[:, 0], paged.tau_min, paged.tau_max, paged.page_start,
+            ctx1, sink=h2.sink, local=h2.local, page=h2.page_size,
+            impl=spec.impl)
+        sel = paging.select_pages(scores, h2.top_k_pages)
+        imp = paging.accumulate_importance(paged.importance, scores)
+        ns = (need & act)[:, None, None]
+        sel = jnp.where(ns, sel, paged.sel_idx)
+        imp = jnp.where(ns, imp, paged.importance)
+        paged = dataclasses.replace(paged, sel_idx=sel, importance=imp)
+        slots = paging.verify_attended_slots(
+            paged.sel_idx, ctx1, sink=h2.sink, local=h2.local,
+            page=h2.page_size, capacity=paged.k_pages.shape[2],
+            n_shards=phys_shards)
+        gk, gv = paging.gather_pages(paged.k_pages, paged.v_pages, slots)
+        valid_p = paging.verify_token_validity(
+            slots, paged.page_start, start, pos_q, sink=h2.sink,
+            local=h2.local, page=h2.page_size, top_k=h2.top_k_pages)
+        kr = jnp.concatenate(
+            [gk, k_r.transpose(0, 2, 1, 3).astype(gk.dtype)], axis=2)
+        vr = jnp.concatenate(
+            [gv, v_r.transpose(0, 2, 1, 3).astype(gv.dtype)], axis=2)
+        tail = jnp.tril(jnp.ones((kch, kch), bool))         # key i <= query j
+        valid = jnp.concatenate([
+            valid_p,
+            jnp.broadcast_to(tail[None, None], (b, nr, kch, kch)),
+        ], axis=3)
+        outs.append(kops.chunk_attention(q_r, kr, vr, valid, impl=spec.impl))
+    if spec.n_streaming > 0:
+        n_s = spec.n_streaming
+        k_s = kp[:, :, nr:]
+        v_s = vp[:, :, nr:]
+        kr = jnp.concatenate([stream.k, k_s.transpose(0, 2, 1, 3)], axis=2)
+        vr = jnp.concatenate([stream.v, v_s.transpose(0, 2, 1, 3)], axis=2)
+        chunk_pos = jnp.broadcast_to(pos_q[:, None, :], (b, n_s, kch))
+        kpos = jnp.concatenate([stream.pos, chunk_pos], axis=2)
+        valid_s = paging.chunk_stream_validity(kpos, pos_q, sink=h2.sink,
+                                               local=h2.local)
+        outs.append(kops.chunk_attention(qp[:, :, nr * g:], kr, vr, valid_s,
+                                         impl=spec.impl))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return _permute_q(out, _inverse_perm(perm), g), paged, stream
+
+
+def chunk_verify_append(
+    spec: AttnSpec,
+    k_new: Array,              # (B, k, Hkv, D) roped — the VERIFIED chunk
+    v_new: Array,
+    paged: cachelib.PagedCache,
+    stream: cachelib.StreamCache,
+    start: Array,              # (B,) context length before the chunk
+    accepted: Array,           # (B,) tokens of the chunk to commit (>= 1)
+    active: Array | None = None,
+    *,
+    perm: Array | None = None,
+    phys_shards: int = 1,
+):
+    """Commit the accepted prefix of a verified chunk into the serve
+    caches via the ragged chunk appends (PR 5) — the same scatter +
+    incremental tau min/max merge a sequence of single-token appends
+    performs, so committed state is bitwise what sequential decode leaves
+    behind. Returns (paged', stream')."""
+    h2 = spec.h2
+    nr = spec.n_retrieval
+    if perm is None:
+        perm = identity_perm(spec)
+    kp = _permute_kv(k_new, perm)
+    vp = _permute_kv(v_new, perm)
+    b = k_new.shape[0]
+    act = jnp.ones((b,), bool) if active is None else \
+        jnp.asarray(active).reshape(b)
+    if nr > 0:
+        paged = cachelib.paged_cache_append_chunk(
+            paged, kp[:, :, :nr], vp[:, :, :nr], start, accepted,
+            active=act, phys_shards=phys_shards)
+    if spec.n_streaming > 0:
+        stream = cachelib.stream_cache_append_chunk(
+            stream, kp[:, :, nr:], vp[:, :, nr:], start, accepted,
+            sink=h2.sink, active=act)
+    return paged, stream
+
+
+# ---------------------------------------------------------------------------
 # Fixed-pool decode with eviction (paper §IV-A.3 "memory consideration")
 # ---------------------------------------------------------------------------
 

@@ -147,6 +147,29 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
+@dataclasses.dataclass
+class VerifyInputs:
+    """Everything a layout's speculative ``verify_chunk`` hook consumes
+    (PR 8). q/k_new/v_new: (B, k, ·, D) roped at positions start ..
+    start+k-1; start: (B,) context length before the chunk; active: (B,)
+    bool live slots; need_select: (B,) bool per-slot share-window phase —
+    the chunk's one selection refresh is gated per slot exactly like a
+    decode select step."""
+
+    q: Array
+    k_new: Array
+    v_new: Array
+    start: Array
+    active: Optional[Array] = None
+    need_select: Optional[Array] = None
+
+
+jax.tree_util.register_dataclass(
+    VerifyInputs,
+    data_fields=["q", "k_new", "v_new", "start", "active", "need_select"],
+    meta_fields=[])
+
+
 # ---------------------------------------------------------------------------
 # Construction-time plan
 # ---------------------------------------------------------------------------
@@ -260,6 +283,22 @@ class AttentionLayout:
             f"layout {self.name!r} does not support ragged "
             f"(continuous-batching) decode")
 
+    # -- speculative verify (PR 8) ---------------------------------------
+    def verify_chunk(self, spec, state: Dict, inputs: "VerifyInputs", *,
+                     perm=None):
+        """Attend k drafted tokens as k decode steps over the PRE-append
+        caches (no KV mutation; selection/importance refresh only)
+        -> (out (B, k, Hq, D), new state)."""
+        raise NotImplementedError(
+            f"layout {self.name!r} does not support speculative verify")
+
+    def verify_append(self, spec, state: Dict, inputs: "VerifyInputs",
+                      accepted, *, perm=None):
+        """Commit the accepted prefix of a verified chunk (ragged chunk
+        appends) -> new state."""
+        raise NotImplementedError(
+            f"layout {self.name!r} does not support speculative verify")
+
 
 _REGISTRY: Dict[str, AttentionLayout] = {}
 
@@ -328,6 +367,21 @@ def dispatch_prefill_chunk(layout, spec, state: Dict,
     return get_layout(layout).prefill_chunk(spec, state, inputs, perm=perm)
 
 
+def dispatch_verify_chunk(layout, spec, state: Dict, inputs: VerifyInputs,
+                          *, perm=None):
+    """Route one speculative verify attention pass to ``layout``'s
+    verify_chunk hook."""
+    return get_layout(layout).verify_chunk(spec, state, inputs, perm=perm)
+
+
+def dispatch_verify_append(layout, spec, state: Dict, inputs: VerifyInputs,
+                           accepted, *, perm=None):
+    """Route the accepted-prefix commit of a verified chunk to
+    ``layout``'s verify_append hook."""
+    return get_layout(layout).verify_append(spec, state, inputs, accepted,
+                                            perm=perm)
+
+
 # ---------------------------------------------------------------------------
 # Registered layouts
 # ---------------------------------------------------------------------------
@@ -376,6 +430,27 @@ class DefaultLayout(AttentionLayout):
 
     # the default body handles scalar and (B,) lengths uniformly
     ragged_decode = decode
+
+    # speculative verify is a single-program body for every layout: like
+    # the chunked-prefill body, its masks are driven by absolute
+    # positions/metadata, and _chunk_phys_shards() maps the fixed page
+    # sections into coplace_shmap's striped physical order — GSPMD
+    # partitions the same program for the placed layouts
+    def verify_chunk(self, spec, state, inputs, *, perm=None):
+        out, paged, stream = hattn.chunk_verify_attention(
+            spec, inputs.q, inputs.k_new, inputs.v_new,
+            state["paged"], state["stream"], inputs.start,
+            inputs.active, inputs.need_select, perm=perm,
+            phys_shards=self._chunk_phys_shards())
+        return out, {"paged": paged, "stream": stream}
+
+    def verify_append(self, spec, state, inputs, accepted, *, perm=None):
+        paged, stream = hattn.chunk_verify_append(
+            spec, inputs.k_new, inputs.v_new,
+            state["paged"], state["stream"], inputs.start, accepted,
+            inputs.active, perm=perm,
+            phys_shards=self._chunk_phys_shards())
+        return {"paged": paged, "stream": stream}
 
 
 class _GspmdLayout(DefaultLayout):

@@ -280,6 +280,112 @@ def chunk_stream_validity(key_pos: Array, pos_q: Array, *, sink: int,
         (kp < sink) | (kp > pq - local))
 
 
+# ---------------------------------------------------------------------------
+# Speculative verify (multi-query decode over the PRE-APPEND cache)
+#
+# The verify chunk holds k tokens at positions start .. start+k-1 (start =
+# current context length); query j plays the role of decode step j and must
+# attend EXACTLY what the sequential engine's token j would attend. Keys at
+# positions >= start are not in the cache yet (attend-before-append) — they
+# arrive as the causally-masked chunk tail, so the paged buffer only ever
+# supplies positions < start and the per-page in-context bound is the CACHE
+# context, shared by all queries. What IS per-query is the section
+# partition: first_local_j = first_local(start+j+1) grows with j, so a page
+# can be local for query 0 and selectable-but-unselected (hence dropped,
+# exactly as the sequential reuse step drops it) for query k-1.
+#
+# The gathered buffer is anchored at first_local(start+1): every query's
+# local low edge is >= it, and the highest live page (start-1)//page is
+# within n_local pages of it, so no extension is needed — per-query
+# validity does all the sectioning.
+# ---------------------------------------------------------------------------
+
+
+def verify_attended_slots(
+    sel_idx: Array,
+    ctx: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+    capacity: int,
+    n_shards: int = 1,
+) -> Array:
+    """[sink | selected | local] slot indices for the verify gather.
+
+    ``ctx`` is start+1 (B,) — the context of the FIRST verify query, which
+    anchors the shared local section. ``sel_idx`` (B, Hkv, K) holds slot
+    indices in the cache's physical page order (identical to logical order
+    unless ``n_shards > 1``); the fixed sink/local sections are logical
+    page indices mapped through ``interleave_slot`` (identity for 1 shard)
+    and clipped for gather safety — verify_token_validity masks the
+    clipped duplicates. Returns (B, Hkv, n_sink + K + n_local) int32.
+    """
+    b, h, _ = sel_idx.shape
+    n_sink, n_local = page_counts(sink=sink, local=local, page=page)
+    ctx = _ctx_batched(ctx, b)
+    first_local = _first_local_page(ctx, local=local, page=page)  # (B,)
+    sink_log = jnp.broadcast_to(jnp.arange(n_sink, dtype=jnp.int32),
+                                (b, n_sink))
+    local_log = first_local[:, None] + jnp.arange(n_local, dtype=jnp.int32)
+    fixed_log = jnp.concatenate([sink_log, local_log], axis=1)
+    fixed_log = jnp.clip(fixed_log, 0, capacity - 1)
+    fixed_phys = interleave_slot(fixed_log, capacity, n_shards)
+    fixed_phys = jnp.broadcast_to(
+        fixed_phys[:, None, :], (b, h, n_sink + n_local)).astype(jnp.int32)
+    return jnp.concatenate(
+        [fixed_phys[:, :, :n_sink], sel_idx.astype(jnp.int32),
+         fixed_phys[:, :, n_sink:]], axis=2)
+
+
+def verify_token_validity(
+    slots: Array,
+    page_start: Array,
+    cache_ctx: Array,
+    pos_q: Array,
+    *,
+    sink: int,
+    local: int,
+    page: int,
+    top_k: int,
+) -> Array:
+    """Per-query validity (B, H, Cq, N*P) for the gathered verify buffer.
+
+    Same section rules as ``token_validity`` with two deltas: the
+    in-context bound is the PRE-APPEND cache length ``cache_ctx`` (B,) —
+    identical for every query because chunk-tail keys are supplied
+    separately — and the sink/selected/local partition is evaluated at
+    each query's own context ``pos_q + 1`` (pos_q: (B, Cq) absolute query
+    positions), so section membership shifts across the chunk exactly as
+    it does across k sequential decode steps.
+    """
+    b, h, n = slots.shape
+    cq = pos_q.shape[1]
+    n_sink, n_local = page_counts(sink=sink, local=local, page=page)
+    sentinel = (slots < 0)[:, :, None, :, None]
+    start = jnp.take_along_axis(page_start, jnp.maximum(slots, 0), axis=2)
+    offs = jnp.arange(page, dtype=jnp.int32)
+    pos = (start[:, :, :, None] + offs[None, None, None, :])[:, :, None]
+    nonempty = (start >= 0)[:, :, None, :, None]
+    cache_ctx = _ctx_batched(cache_ctx, b)
+    in_ctx = pos < cache_ctx[:, None, None, None, None]
+    section = jnp.concatenate([
+        jnp.zeros((n_sink,), jnp.int32),
+        jnp.ones((top_k,), jnp.int32),
+        jnp.full((n_local,), 2, jnp.int32),
+    ])
+    sec = section[None, None, None, :, None]
+    first_local = _first_local_page(
+        pos_q + 1, local=local, page=page)[:, None, :, None, None]
+    pidx = (start // page)[:, :, None, :, None]
+    ok_sink = jnp.broadcast_to(True, pos.shape)
+    ok_local = ((pos >= jnp.maximum(first_local, n_sink) * page)
+                & (pidx >= first_local))
+    ok_sel = (pidx >= n_sink) & (pidx < first_local)
+    ok = jnp.where(sec == 0, ok_sink, jnp.where(sec == 2, ok_local, ok_sel))
+    return (nonempty & in_ctx & ok & ~sentinel).reshape(b, h, cq, n * page)
+
+
 def accumulate_importance(importance: Array, scores: Array) -> Array:
     """Paper: accumulate the computed relevance score at each step.
 

@@ -206,6 +206,104 @@ def prefill_chunk(cfg: ArchConfig, params, state, tokens, *, chunk_len,
     return unembed(cfg, params, x_last), new_state
 
 
+def verify_forward(cfg: ArchConfig, params, state, tokens, *, active,
+                   need_select, plan=None, impl: str = "ref", layout=None):
+    """Speculative verify forward: run k drafted tokens per slot as k
+    decode steps in ONE chunked pass over the PRE-append caches
+    (attend-before-append; see core/hybrid_attention.py).
+
+    tokens: (B, k) int32 — row 0 is each slot's pending feed token, rows
+    1..k-1 the draft; positions are state["length"] .. +k-1. Returns
+    (logits (B, k, V), state', stash): logits row j is the target
+    distribution at position length+j; state' carries ONLY the refreshed
+    page selection/importance (gated by ``need_select``/``active``) with
+    KV pages, stream rings, and lengths untouched; ``stash`` holds each
+    layer's roped chunk (k, v) for ``verify_commit``. Acceptance decides
+    how much of the chunk commits — the cache is never rolled back.
+    """
+    plan = plan if plan is not None else T.default_plan(cfg)
+    start = jnp.asarray(state["length"], jnp.int32).reshape(-1)   # (B,)
+    x = jnp.take(params["embed"], tokens, axis=0)                 # (B,k,d)
+    kch = tokens.shape[1]
+    pos_q = start[:, None] + jnp.arange(kch, dtype=jnp.int32)
+    rope = _rope(cfg, pos_q)                                      # (B,k,half)
+    active = jnp.asarray(active).reshape(-1)
+    need_select = jnp.asarray(need_select).reshape(-1)
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    def period_fn(x, xs):
+        params_p, plan_p, cache_p = xs
+        new_caches, stash_p = {}, {}
+        for pos in range(p_len):
+            x, c, kv = T.block_verify_chunk(
+                cfg, pos, params_p[f"pos{pos}"], plan_p[f"pos{pos}"], x,
+                rope, cache_p[f"pos{pos}"], start=start, active=active,
+                need_select=need_select, impl=impl, layout=layout)
+            new_caches[f"pos{pos}"] = c
+            stash_p[f"pos{pos}"] = kv
+        return x, (new_caches, stash_p)
+
+    new_state: dict[str, Any] = {"length": state["length"],
+                                 "blocks": {}, "rem": {}}
+    stash: dict[str, Any] = {"blocks": {}, "rem": {}}
+    if n_per > 0:
+        x, (caches, stash_b) = jax.lax.scan(
+            period_fn, x,
+            (params["blocks"], plan["blocks"], state["blocks"]))
+        new_state["blocks"] = caches
+        stash["blocks"] = stash_b
+    for r in range(n_rem):
+        x, c, kv = T.block_verify_chunk(
+            cfg, r, params["rem"][f"rem{r}"], plan["rem"][f"rem{r}"], x,
+            rope, state["rem"][f"rem{r}"], start=start, active=active,
+            need_select=need_select, impl=impl, layout=layout)
+        new_state["rem"][f"rem{r}"] = c
+        stash["rem"][f"rem{r}"] = kv
+    return unembed(cfg, params, x), new_state, stash
+
+
+def verify_commit(cfg: ArchConfig, state, stash, *, accepted, active,
+                  plan=None, impl: str = "ref", layout=None):
+    """Commit each slot's accepted prefix (``accepted`` (B,), >= 1
+    tokens of the verified chunk) into the serve caches from the
+    ``verify_forward`` stash, through the same ragged chunk appends a
+    sequence of single-token decode appends reduces to. Inactive slots
+    commit nothing. Returns the advanced state (length += accepted)."""
+    plan = plan if plan is not None else T.default_plan(cfg)
+    start = jnp.asarray(state["length"], jnp.int32).reshape(-1)
+    accepted = jnp.asarray(accepted, jnp.int32).reshape(-1)
+    active = jnp.asarray(active).reshape(-1)
+    n_per, n_rem = T.layer_layout(cfg)
+    p_len = T.period_len(cfg)
+
+    def period_fn(_, xs):
+        plan_p, cache_p, stash_p = xs
+        new_caches = {}
+        for pos in range(p_len):
+            new_caches[f"pos{pos}"] = T.block_verify_append(
+                cfg, pos, plan_p[f"pos{pos}"], cache_p[f"pos{pos}"],
+                stash_p[f"pos{pos}"], start=start, accepted=accepted,
+                active=active, impl=impl, layout=layout)
+        return (), new_caches
+
+    new_len = jnp.where(active, start + accepted, start)
+    new_state: dict[str, Any] = {
+        "length": new_len.astype(jnp.asarray(state["length"]).dtype),
+        "blocks": {}, "rem": {}}
+    if n_per > 0:
+        _, caches = jax.lax.scan(
+            period_fn, (),
+            (plan["blocks"], state["blocks"], stash["blocks"]))
+        new_state["blocks"] = caches
+    for r in range(n_rem):
+        new_state["rem"][f"rem{r}"] = T.block_verify_append(
+            cfg, r, plan["rem"][f"rem{r}"], state["rem"][f"rem{r}"],
+            stash["rem"][f"rem{r}"], start=start, accepted=accepted,
+            active=active, impl=impl, layout=layout)
+    return new_state
+
+
 def decode_step(cfg: ArchConfig, params, state, token, *, plan=None,
                 do_select: bool = True, impl: str = "ref", layout=None,
                 active=None, need_select=None):

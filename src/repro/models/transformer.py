@@ -382,6 +382,55 @@ def block_prefill_chunk(cfg: ArchConfig, pos: int, p, plan, x, rope, cache,
     return x, cache
 
 
+def block_verify_chunk(cfg: ArchConfig, pos: int, p, plan, x, rope, cache,
+                       *, start, active, need_select, impl="ref",
+                       layout=None):
+    """Speculative verify: k drafted tokens through one block as k decode
+    steps in one chunked attention, WITHOUT touching the block's KV
+    caches (selection/importance refresh only — see
+    core/hybrid_attention.chunk_verify_attention). x: (B, k, d); ``rope``
+    is (cos, sin) at positions start .. start+k-1. Returns
+    (x, cache, (k_roped, v)) — the roped chunk KV is stashed so
+    ``block_verify_append`` can commit the accepted prefix after the
+    acceptance length is known, without recomputing projections.
+
+    Speculation is gated to all-attention hybrid stacks at Engine
+    construction, so unlike the other block modes there is no mixer
+    branch here."""
+    from repro.runtime import hints
+    p = hints.unshard_block_params(p)
+    x = hints.act(x)
+    spec = attn_spec(cfg, pos, impl)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    b, kch = x.shape[0], x.shape[1]
+    q, k, v = _qkv(cfg, p, h)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    inputs = layoutlib.VerifyInputs(
+        q=q, k_new=k, v_new=v, start=start, active=active,
+        need_select=need_select)
+    o, cache = layoutlib.dispatch_verify_chunk(
+        layout, spec, cache, inputs, perm=plan["perm"])
+    x = x + dense(o.reshape(b, kch, -1), p["wo"])
+    if cfg.layer_has_ffn(pos):
+        x = _ffn_apply(cfg, p, x)
+    return x, cache, (k, v)
+
+
+def block_verify_append(cfg: ArchConfig, pos: int, plan, cache, kv, *,
+                        start, accepted, active, impl="ref", layout=None):
+    """Commit the accepted prefix of a verified chunk into one block's
+    caches from the (k_roped, v) stash of ``block_verify_chunk``.
+    Returns the new block cache."""
+    spec = attn_spec(cfg, pos, impl)
+    k, v = kv
+    inputs = layoutlib.VerifyInputs(
+        q=k, k_new=k, v_new=v, start=start, active=active)
+    return layoutlib.dispatch_verify_append(
+        layout, spec, cache, inputs, accepted, perm=plan["perm"])
+
+
 def block_decode(cfg: ArchConfig, pos: int, p, plan, x, rope1, cache, *,
                  length, do_select: bool, impl="ref", layout=None,
                  active=None, need_select=None):

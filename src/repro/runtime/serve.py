@@ -82,6 +82,73 @@ def make_ragged_decode_step(cfg: ArchConfig, scfg: ServeConfig, *,
     return decode
 
 
+def make_sample_step(cfg: ArchConfig, scfg: ServeConfig):
+    """Batched per-slot sampler for the engine's decode loop (PR 8).
+
+    (logits (B, V), base (B, 2) uint32, gen (B,) int32, temp/topp (B,),
+    active (B,)) -> (tokens (B,) int32, gen') — greedy is the temp==0
+    lane of the same compiled program, per-token keys derive in-graph
+    from the request-owned base keys, and gen advances for active slots
+    only, so one program serves every step (the zero-recompile
+    invariant; serving/sampling.py has the RNG-ownership story).
+    """
+    del cfg, scfg  # sampling is model- and layout-independent
+
+    def sample(logits, base, gen, temp, topp, active):
+        from repro.serving import sampling
+
+        tok = sampling.sample_tokens(logits, base, gen, temp, topp)
+        return tok, jnp.where(active, gen + 1, gen)
+    return sample
+
+
+def make_verify_step(cfg: ArchConfig, scfg: ServeConfig, *, k: int):
+    """Speculative verify step at the static (B, k) bucket (PR 8).
+
+    tokens (B, k) int32: row 0 each slot's pending feed token, rows
+    1..k-1 the draft. One compiled program per k: verify-forward over the
+    pre-append caches (models/model.verify_forward), coupled target
+    sampling (each chunk position uses EXACTLY the per-request key the
+    non-speculative sampler would — serving/sampling.sample_chunk), the
+    rejection-sampling acceptance rule, and the accepted-prefix commit.
+
+    For point-mass drafts the coupled rule (accept draft d_j iff it
+    equals the target sampled from p_j with that position's key; on the
+    first mismatch emit the target) IS leftover-probability rejection
+    sampling — P(accept) = p_j(d_j), and the emitted token on reject is
+    distributed as norm((p_j - q_j)+) — so the output trace is not just
+    distributionally but samplewise identical to non-speculative
+    sampling, and greedy (temp=0) degenerates to "accept while the draft
+    matches argmax". ``max_emit`` (B,) is the engine's host-side clamp
+    (share-window boundary, budget, capacity) — acceptance never crosses
+    a selection-refresh boundary mid-chunk. Returns
+    (targets (B, k), accepted (B,), next_tok (B,), gen', state').
+    """
+    from repro.serving import sampling
+
+    layout = _layout(scfg)
+
+    def verify(params, state, tokens, active, need_select, base, gen,
+               temp, topp, max_emit):
+        assert tokens.shape[1] == k, (tokens.shape, k)
+        logits, state1, stash = M.verify_forward(
+            cfg, params, state, tokens, active=active,
+            need_select=need_select, impl=scfg.impl, layout=layout)
+        targets = sampling.sample_chunk(logits, base, gen, temp, topp)
+        matches = tokens[:, 1:] == targets[:, :-1]          # (B, k-1)
+        n_nat = 1 + jnp.sum(
+            jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+        n = jnp.clip(n_nat, 1, jnp.maximum(max_emit, 1)).astype(jnp.int32)
+        state2 = M.verify_commit(cfg, state1, stash, accepted=n,
+                                 active=active, impl=scfg.impl,
+                                 layout=layout)
+        next_tok = jnp.take_along_axis(targets, (n - 1)[:, None],
+                                       axis=1)[:, 0]
+        new_gen = jnp.where(active, gen + n, gen)
+        return targets, n, next_tok, new_gen, state2
+    return verify
+
+
 def make_prefill_chunk_step(cfg: ArchConfig, scfg: ServeConfig, *,
                             chunk: int):
     """Chunked-prefill half of the engine's mixed prefill+decode step.

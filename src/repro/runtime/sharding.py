@@ -158,6 +158,14 @@ def serve_step_out_shardings(mesh: Mesh, state_shardings):
     return (replicated(mesh), state_shardings)
 
 
+def verify_step_out_shardings(mesh: Mesh, state_shardings):
+    """(targets, accepted, next_tok, gen', state) out_shardings for the
+    speculative verify jit: the per-slot token/count vectors replicated,
+    the serve state pinned to its layout placement."""
+    rep = replicated(mesh)
+    return (rep, rep, rep, rep, state_shardings)
+
+
 def batch_sharding(mesh: Mesh, batch_size: int):
     """Sharding for (B, ...) input batches: B over (pod, data) if divisible."""
     ax = batch_axes(mesh)

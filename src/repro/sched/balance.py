@@ -222,13 +222,23 @@ def load_imbalance(vals: Sequence[float]) -> float:
 
 def admission_score(ctx_lengths: Sequence[int], candidate_ctx: int, *,
                     n_shards: int, page_size: int,
-                    hot_cap: int | None = None) -> float:
+                    hot_cap: int | None = None,
+                    spec_tokens: int | None = None) -> float:
     """Per-device page-load imbalance of the batch AFTER admitting a
     request at context ``candidate_ctx`` next to the live ``ctx_lengths``.
     Lower is better; the engine admits the queued request minimizing it.
     Under a tiered engine ``hot_cap`` caps each slot's scored pages at
-    the device-resident hot-set size (see ``device_page_loads``)."""
-    loads = device_page_loads(list(ctx_lengths) + [int(candidate_ctx)],
-                              n_shards=n_shards, page_size=page_size,
-                              hot_cap=hot_cap)
+    the device-resident hot-set size (see ``device_page_loads``).
+
+    Under speculative decode (``spec_tokens=k``) every slot is scored at
+    the page span of one verify step ahead (``ctx + k - 1``): a verify
+    step appends up to k tokens before the host can rebalance, so a slot
+    sitting just below a page boundary WILL open its next page within
+    the current chunk — the score sees the page the chunk commits, not
+    the one the host mirror shows."""
+    horizon = max(int(spec_tokens) - 1, 0) if spec_tokens else 0
+    ctxs = [int(c) + horizon for c in ctx_lengths]
+    ctxs.append(int(candidate_ctx) + horizon)
+    loads = device_page_loads(ctxs, n_shards=n_shards,
+                              page_size=page_size, hot_cap=hot_cap)
     return load_imbalance(loads)

@@ -1,0 +1,235 @@
+"""Draft providers for self-drafted speculative decoding (PR 8).
+
+A ``DraftProvider`` proposes ``k - 1`` continuation tokens per active
+slot each verify step; the engine prepends the slot's pending feed token
+and verifies all ``k`` positions in ONE chunked forward
+(runtime/serve.make_verify_step). Losslessness never depends on the
+draft — the coupled rejection sampler emits exactly the tokens the
+non-speculative engine would for ANY proposal — so providers only trade
+acceptance rate against draft cost:
+
+  * ``NgramDraft`` — host-side prompt-lookup (suffix n-gram match over
+    the request's prompt + emitted history). Model-free, deterministic,
+    zero device work: the test workhorse.
+  * ``StreamingDraft`` — self-draft: runs the decode body on a throwaway
+    copy of the serve state whose retrieval-head page selection is
+    masked out (``sel_idx = -1``), i.e. the model drafting with its own
+    streaming (sink + local) heads only — the H²EAL sparse skeleton as
+    its own cheap draft model. k-1 chained greedy reuse steps, no
+    selection refresh, caches mutated only on the copy.
+  * ``ConstantDraft`` / ``ReplayDraft`` — test doubles forcing the
+    all-reject (degenerates to the baseline one-token step) and
+    all-accept (replay a baseline run's trace) extremes
+    (tests/test_sampling.py).
+
+Providers that set ``needs_host_tokens`` get a per-slot host token
+history (prompt + every emitted token) maintained by the engine; the
+rest work from device state alone.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cache_size(fn) -> int:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
+class DraftProvider:
+    """Interface: propose ``(B, k-1)`` draft tokens for the active slots.
+
+    ``draft`` may return a numpy array or a device array; rows of
+    inactive slots are ignored. ``needs_host_tokens`` asks the engine to
+    maintain ``engine._spec_history[slot]`` (prompt + emitted tokens,
+    including the pending feed token as the last element).
+    """
+
+    name = "base"
+    needs_host_tokens = False
+
+    def draft(self, engine, active: np.ndarray, k: int):
+        raise NotImplementedError
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-entry counts of any jits the provider owns (merged
+        into Engine.jit_cache_sizes() for the zero-recompile check)."""
+        return {}
+
+
+class NgramDraft(DraftProvider):
+    """Prompt-lookup drafting: match the longest recent suffix n-gram
+    (n = max_n .. 1) of the slot's history against an earlier occurrence
+    and propose the tokens that followed it; pad by repeating the last
+    proposed (or feed) token. Pure host work, fully deterministic."""
+
+    name = "ngram"
+    needs_host_tokens = True
+
+    def __init__(self, max_n: int = 3):
+        self.max_n = max(int(max_n), 1)
+
+    def _lookup(self, hist: Sequence[int], m: int) -> List[int]:
+        hist = list(hist)
+        cont: List[int] = []
+        for n in range(min(self.max_n, len(hist) - 1), 0, -1):
+            suffix = hist[-n:]
+            # most recent EARLIER occurrence of the suffix
+            for i in range(len(hist) - n - 1, -1, -1):
+                if hist[i:i + n] == suffix:
+                    cont = hist[i + n:i + n + m]
+                    break
+            if cont:
+                break
+        pad = cont[-1] if cont else hist[-1]
+        while len(cont) < m:
+            cont.append(pad)
+        return cont[:m]
+
+    def draft(self, engine, active: np.ndarray, k: int):
+        b = engine.batch
+        out = np.zeros((b.max_batch, max(k - 1, 0)), np.int32)
+        if k <= 1:
+            return out
+        for slot in np.nonzero(active)[0]:
+            slot = int(slot)
+            out[slot] = self._lookup(engine._spec_history[slot], k - 1)
+        return out
+
+
+class StreamingDraft(DraftProvider):
+    """Self-draft with the model's own streaming heads: decode ``k - 1``
+    greedy tokens on a copy of the serve state whose retrieval-head page
+    selection is masked to the -1 sentinel — retrieval heads then attend
+    to sink + local pages only (core/paging.token_validity drops
+    negative slots), which is exactly the model restricted to its
+    streaming skeleton. The copy is discarded after drafting; the real
+    state is never touched, so the verify step sees pristine pre-append
+    caches."""
+
+    name = "streaming"
+    needs_host_tokens = False
+
+    def __init__(self):
+        self._owner = None
+        self._mask = None
+        self._dec = None
+
+    def _bind(self, engine):
+        if self._owner is engine:
+            return
+        if self._owner is not None:
+            raise ValueError(
+                "a StreamingDraft instance serves one engine (its jit "
+                "caches are engine-private); build a fresh one")
+        from repro.runtime import serve as serve_rt
+
+        scfg = serve_rt.ServeConfig(capacity=engine.cache_capacity,
+                                    layout=engine.layout,
+                                    impl=engine.attn_impl)
+        dec_fn = serve_rt.make_ragged_decode_step(engine.cfg, scfg,
+                                                  do_select=False)
+
+        def masked_copy(state):
+            def leaf(path, x):
+                if jax.tree_util.keystr(path).endswith(".sel_idx"):
+                    return jnp.full_like(x, -1)
+                return x
+            return jax.tree_util.tree_map_with_path(leaf, state)
+
+        # the mask jit COPIES (no donation — the real state stays live
+        # for the verify step); the chained decode donates the copy
+        self._mask = jax.jit(masked_copy, **engine._state_out_shard)
+        self._dec = jax.jit(dec_fn, donate_argnums=(1,),
+                            **engine._dec_out_shard)
+        self._owner = engine
+
+    def draft(self, engine, active: np.ndarray, k: int):
+        if k <= 1:
+            return np.zeros((engine.batch.max_batch, 0), np.int32)
+        self._bind(engine)
+        act = jnp.asarray(active)
+        state = self._mask(engine.batch.serve)
+        tok = engine._tok
+        cols = []
+        for _ in range(k - 1):
+            logits, state = self._dec(engine.params, state, tok, act)
+            tok = jnp.where(act,
+                            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            tok)
+            cols.append(tok)
+        return jnp.stack(cols, axis=1)
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        if self._owner is None:
+            return {}
+        return {"mask": _cache_size(self._mask),
+                "decode": _cache_size(self._dec)}
+
+
+class ConstantDraft(DraftProvider):
+    """Test double: a constant (by default invalid) draft token — every
+    position rejects, so each verify step accepts exactly the one
+    coupled target and the engine degenerates to the baseline
+    one-token-per-step trajectory."""
+
+    name = "constant"
+
+    def __init__(self, token: int = -1):
+        self.token = int(token)
+
+    def draft(self, engine, active: np.ndarray, k: int):
+        return np.full((engine.batch.max_batch, max(k - 1, 0)),
+                       self.token, np.int32)
+
+
+class ReplayDraft(DraftProvider):
+    """Test double: replay an oracle continuation per uid (e.g. the
+    token trace of a baseline non-speculative run) — under greedy every
+    draft position matches its coupled target, forcing the all-accept
+    path up to the engine's ``max_emit`` clamps."""
+
+    name = "replay"
+
+    def __init__(self, oracle: Dict[int, Sequence[int]]):
+        self.oracle = {int(u): [int(t) for t in toks]
+                       for u, toks in oracle.items()}
+
+    def draft(self, engine, active: np.ndarray, k: int):
+        b = engine.batch
+        out = np.full((b.max_batch, max(k - 1, 0)), -1, np.int32)
+        if k <= 1:
+            return out
+        for slot in np.nonzero(active)[0]:
+            slot = int(slot)
+            toks = self.oracle.get(int(b.uid[slot]))
+            if toks is None:
+                continue
+            # tokens emitted so far (incl. the prefill token) index the
+            # oracle: the feed token is oracle[emitted-1], so the draft
+            # continues at oracle[emitted]
+            emitted = int(engine._spec_emitted[slot])
+            cont = toks[emitted:emitted + (k - 1)]
+            out[slot, :len(cont)] = cont
+        return out
+
+
+_BUILTINS = {"ngram": NgramDraft, "streaming": StreamingDraft}
+
+
+def resolve_draft(spec) -> DraftProvider:
+    """Resolve ``Engine(draft=...)``: a provider instance passes
+    through; a name builds the builtin (``ngram`` | ``streaming``)."""
+    if isinstance(spec, DraftProvider):
+        return spec
+    if isinstance(spec, str) and spec in _BUILTINS:
+        return _BUILTINS[spec]()
+    raise ValueError(
+        f"unknown draft provider {spec!r}; builtins: "
+        f"{sorted(_BUILTINS)} (or pass a DraftProvider instance)")

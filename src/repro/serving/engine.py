@@ -83,6 +83,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.runtime import serve as serve_rt
+from repro.serving import sampling as samplib
 
 
 @dataclasses.dataclass
@@ -96,6 +97,13 @@ class Request:
     uid: int
     prompt: np.ndarray          # (S,) int32
     max_new: int
+    # per-request sampling policy (serving/sampling.py). Defaults are
+    # greedy argmax — bit-identical to the pre-sampling engine. The RNG
+    # key stream is owned by (seed, uid), never by the slot, so traces
+    # are invariant to slot churn and admission order.
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0
 
 
 @dataclasses.dataclass
@@ -132,6 +140,11 @@ class EngineStats:
     tier_spills: int = 0         # pages archived to the far store
     tier_fills: int = 0          # demand fills (miss repair)
     tier_prefetch: int = 0       # speculative fills one window ahead
+    # speculative decode (Engine(spec_tokens=k)):
+    spec_steps: int = 0          # verify dispatches (batched steps)
+    spec_slot_steps: int = 0     # per-slot verify events (accept samples)
+    spec_drafted: int = 0        # draft tokens proposed (k-1 per event)
+    spec_accepted: int = 0       # tokens emitted by verify steps (>= 1 each)
 
     @property
     def prefills(self) -> int:
@@ -147,6 +160,21 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def steps_per_s(self) -> float:
+        """Decode-step rate. Identical to ``tokens_per_s`` per slot
+        without speculation; under ``spec_tokens=k`` one verify step
+        emits up to k tokens per slot, so the two rates split — report
+        BOTH (the PR-8 stats fix; benchmarks/serve_throughput.py)."""
+        return self.decode_steps / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_accepted_len(self) -> float:
+        """Mean tokens emitted per per-slot verify event (1.0 = every
+        draft rejected; k = every draft accepted)."""
+        return (self.spec_accepted / self.spec_slot_steps
+                if self.spec_slot_steps else 0.0)
 
     @property
     def tier_hit_rate(self) -> float:
@@ -176,6 +204,14 @@ class BatchState:
     uid: np.ndarray              # (B,) int64 — -1 when free
     remaining: np.ndarray        # (B,) int64 — generation budget left
     prompt_left: np.ndarray      # (B,) int64 — prompt tokens not yet fed
+    # per-slot sampling lanes (device arrays; serving/sampling.py). Rows
+    # are (re)written eagerly at admission; ``samp_gen`` — the per-slot
+    # generation index driving in-graph key derivation — additionally
+    # advances inside the sample/verify jits.
+    samp_base: jax.Array = None  # (B, 2) uint32 — request base keys
+    samp_temp: jax.Array = None  # (B,) f32
+    samp_topp: jax.Array = None  # (B,) f32
+    samp_gen: jax.Array = None   # (B,) int32 — tokens sampled so far
 
     @property
     def max_batch(self) -> int:
@@ -303,6 +339,24 @@ class Engine:
                   token traces are bit-identical to the all-resident
                   engine (docs/serving.md §Tiered residency). Counted
                   in ``EngineStats.tier_*``.
+    spec_tokens : draft length k enabling SPECULATIVE decoding: each
+                  decode step drafts k-1 tokens per active slot
+                  (serving/draft.py), verifies all k in ONE chunked
+                  forward at the static (B, k) bucket (the PR-6
+                  pre-append chunk path), and accepts via coupled
+                  rejection sampling — lossless, so traces (greedy AND
+                  stochastic) are identical to ``spec_tokens=None``
+                  (docs/serving.md §Speculative decode). Only accepted
+                  prefixes are ever appended (attend-before-append; tau
+                  scatter-min/max is not invertible, so there is nothing
+                  to roll back). Requires all-attention mixers, full
+                  attention pattern, H²EAL enabled, token prompts, no
+                  tiering, and 1 <= k <= h2eal.local (the verify chunk
+                  tail must fit the local window).
+    draft       : DraftProvider instance or builtin name — ``"ngram"``
+                  (host prompt-lookup, deterministic, default) or
+                  ``"streaming"`` (self-draft on the model's streaming
+                  heads). Ignored without ``spec_tokens``.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
@@ -312,7 +366,9 @@ class Engine:
                  admit_lookahead: int = 4,
                  balance_shards: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 hot_pages: Optional[int] = None):
+                 hot_pages: Optional[int] = None,
+                 spec_tokens: Optional[int] = None,
+                 draft="ngram"):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
 
@@ -350,6 +406,42 @@ class Engine:
                     "embedding; frontend-stub archs (vlm/audio) need "
                     "prefill_chunk=None (prefill-then-pack)")
         self.share_window = max(cfg.h2eal.share_window, 1)
+        self.spec_tokens = int(spec_tokens) if spec_tokens else None
+        self.draft = None
+        if self.spec_tokens is not None:
+            from repro.configs.base import (ATTN_LOCAL_GLOBAL,
+                                            MIXER_ATTENTION)
+            from repro.serving import draft as draftlib
+            # the verify chunk runs the attention decode body only: no
+            # recurrent-mixer chunk resume, no local-global windows, and
+            # the chunk tail must fit inside every later query's local
+            # window (k <= h2eal.local — the no-extra-pages gather
+            # argument in core/paging.verify_token_validity)
+            if cfg.mixer_pattern and any(m != MIXER_ATTENTION
+                                         for m in cfg.mixer_pattern):
+                raise ValueError(
+                    "spec_tokens requires all-attention mixers; "
+                    f"mixer_pattern={cfg.mixer_pattern}")
+            if cfg.attn_pattern == ATTN_LOCAL_GLOBAL:
+                raise ValueError(
+                    "spec_tokens requires the full attention pattern "
+                    "(local_global windows have no verify-chunk path)")
+            if not cfg.h2eal.enabled:
+                raise ValueError("spec_tokens requires h2eal.enabled")
+            if cfg.embed_frontend_stub:
+                raise ValueError(
+                    "spec_tokens feeds token chunks through the "
+                    "embedding; frontend-stub archs are unsupported")
+            if hot_pages:
+                raise ValueError(
+                    "spec_tokens is incompatible with tiered residency "
+                    "(the verify jit donates its input state; miss "
+                    "repair needs it preserved)")
+            if not 1 <= self.spec_tokens <= cfg.h2eal.local:
+                raise ValueError(
+                    f"spec_tokens={self.spec_tokens} must be in "
+                    f"[1, h2eal.local={cfg.h2eal.local}]")
+            self.draft = draftlib.resolve_draft(draft)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
                                     layout=self.layout, impl=self.attn_impl)
         self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
@@ -398,6 +490,34 @@ class Engine:
         self._dec_reuse = jax.jit(
             serve_rt.make_ragged_decode_step(cfg, scfg, do_select=False),
             donate_argnums=(1,), **dec_shard)
+        # per-slot sampling (always on; temp=0 rows take the argmax lane
+        # bit-identically) + the speculative verify step (PR 8). Draft
+        # providers reuse these out_shardings dicts for their own jits.
+        self._dec_out_shard = dec_shard
+        self._state_out_shard = reset_shard
+        samp_shard = {}
+        ver_shard = {}
+        if self.plan.shard_state:
+            rep = shardlib.replicated(self.mesh)
+            samp_shard = {"out_shardings": (rep, rep)}
+            ver_shard = {"out_shardings":
+                         shardlib.verify_step_out_shardings(self.mesh, ss)}
+        self._sample = jax.jit(serve_rt.make_sample_step(cfg, scfg),
+                               **samp_shard)
+
+        def _sample_one_fn(logits, base, gen, temp, topp):
+            return samplib.sample_tokens(logits[None], base[None],
+                                         gen[None], temp[None],
+                                         topp[None])[0]
+        self._sample_one = jax.jit(_sample_one_fn)
+        self._samp_host: Dict[int, tuple] = {}   # slot -> (base, t, p)
+        self._verify = None
+        if self.spec_tokens is not None:
+            self._verify = jax.jit(
+                serve_rt.make_verify_step(cfg, scfg, k=self.spec_tokens),
+                donate_argnums=(1,), **ver_shard)
+            self._spec_history: Dict[int, List[int]] = {}
+            self._spec_emitted = np.zeros((max_batch,), np.int64)
         self._tier = None
         self._tier_plan = None       # pending (need, sel, hotness) refresh
         if self.hot_pages is not None:
@@ -460,6 +580,10 @@ class Engine:
             uid=np.full((max_batch,), -1, np.int64),
             remaining=np.zeros((max_batch,), np.int64),
             prompt_left=np.zeros((max_batch,), np.int64),
+            samp_base=jnp.zeros((max_batch, 2), jnp.uint32),
+            samp_temp=jnp.zeros((max_batch,), jnp.float32),
+            samp_topp=jnp.ones((max_batch,), jnp.float32),
+            samp_gen=jnp.zeros((max_batch,), jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -686,7 +810,40 @@ class Engine:
             raise ValueError(f"max_new must be >= 1, got {req.max_new} "
                              f"(every admitted request emits at least the "
                              f"prefill token)")
+        samplib.SamplingParams(temperature=req.temperature,
+                               top_p=req.top_p, seed=req.seed).validate()
         self._queue.append(req)
+
+    def _set_sampling(self, req: Request, slot: int):
+        """Install the request's sampling lanes into slot ``slot``: the
+        base key is a pure function of (seed, uid) — never of the slot —
+        so the key stream (and hence any stochastic trace) is invariant
+        to slot churn and admission order."""
+        base = samplib.request_key(req.seed, req.uid)
+        b = self.batch
+        b.samp_base = b.samp_base.at[slot].set(base)
+        b.samp_temp = b.samp_temp.at[slot].set(req.temperature)
+        b.samp_topp = b.samp_topp.at[slot].set(req.top_p)
+        b.samp_gen = b.samp_gen.at[slot].set(0)
+        self._samp_host[slot] = (base, float(req.temperature),
+                                 float(req.top_p))
+        if self.spec_tokens is not None and self.draft.needs_host_tokens:
+            self._spec_history[slot] = [int(t) for t in
+                                        np.asarray(req.prompt)]
+
+    def _first_token(self, slot: int, logits_row):
+        """Sample the request's first token (generation index 0) from
+        the prefill logits row and advance the slot's generation index."""
+        base, temp, topp = self._samp_host[slot]
+        first = self._sample_one(logits_row, base, 0, temp, topp)
+        b = self.batch
+        b.samp_gen = b.samp_gen.at[slot].set(1)
+        self._tok = self._tok.at[slot].set(first)
+        if self.spec_tokens is not None:
+            self._spec_emitted[slot] = 1
+            if self.draft.needs_host_tokens:
+                self._spec_history[slot].append(int(jax.device_get(first)))
+        return first
 
     def _new_completion(self, req: Request, slot: int) -> Completion:
         comp = Completion(uid=req.uid, prompt_len=len(req.prompt),
@@ -707,14 +864,14 @@ class Engine:
         (``_promote_ready``), so every active slot's phase stays aligned
         mod the share window."""
         prompt = jnp.asarray(np.asarray(req.prompt)[None])  # (1, S)
+        self._set_sampling(req, slot)
         with self._mesh_ctx():
             logits, small = self._prefill(self.params, prompt)
             self.batch.serve = self._pack(self.batch.serve, small,
                                           jnp.int32(slot))
+            first = self._first_token(slot, logits[0])
         if self._tier is not None:
             self._tier.reset_slot(slot)   # pack rewrote every device row
-        first = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
-        self._tok = self._tok.at[slot].set(first)
         b = self.batch
         b.ready[slot] = True
         b.lengths[slot] = len(req.prompt)
@@ -737,6 +894,7 @@ class Engine:
         immediately; its cache rows are cleared to the empty sentinels
         and subsequent engine steps feed the prompt chunk by chunk."""
         b = self.batch
+        self._set_sampling(req, slot)
         with self._mesh_ctx():
             b.serve = self._reset(b.serve, jnp.int32(slot))
         if self._tier is not None:
@@ -757,8 +915,7 @@ class Engine:
         (``_promote_ready``), keeping all active phases aligned."""
         b = self.batch
         b.prefilling[slot] = False
-        first = jnp.argmax(chunk_logits[slot], axis=-1).astype(jnp.int32)
-        self._tok = self._tok.at[slot].set(first)
+        first = self._first_token(slot, chunk_logits[slot])
         b.ready[slot] = True
         b.phase[slot] = 0          # select on the slot's first decode step
         comp = self._live[slot]
@@ -778,6 +935,9 @@ class Engine:
         b.remaining[slot] = 0
         if self._tier is not None:
             self._tier.reset_slot(slot)   # next occupant rewrites the rows
+        self._samp_host.pop(slot, None)
+        if self.spec_tokens is not None:
+            self._spec_history.pop(slot, None)
         comp = self._live.pop(slot)
         comp.finished_step = self.stats.decode_steps
         self.completions[comp.uid] = comp
@@ -806,7 +966,7 @@ class Engine:
             s = balance.admission_score(
                 live, len(self._queue[i].prompt), n_shards=n_shards,
                 page_size=self.cfg.h2eal.page_size,
-                hot_cap=self.hot_pages)
+                hot_cap=self.hot_pages, spec_tokens=self.spec_tokens)
             if best_s is None or s < best_s - 1e-12:
                 best_i, best_s = i, s
         if best_i == 0:
@@ -875,7 +1035,14 @@ class Engine:
         if not b.ready.any():
             return
         act = b.active
-        if act.any() and (b.phase[act] % self.share_window).any():
+        # Speculative mode: verify steps advance each slot's phase by a
+        # VARIABLE accepted count, so active phases de-align permanently
+        # and the alignment precondition below could never fire again —
+        # READY slots would deadlock. Promote immediately instead; a
+        # slot's refresh schedule is a function of its own phase alone
+        # either way, so per-slot traces are unchanged.
+        if (self.spec_tokens is None and act.any()
+                and (b.phase[act] % self.share_window).any()):
             return
         b.active |= b.ready
         b.ready[:] = False
@@ -913,6 +1080,8 @@ class Engine:
     def _decode_once(self, active: np.ndarray):
         """The decode half of a step, over the captured ``active`` mask
         (slots that finished prefilling THIS step start next step)."""
+        if self.spec_tokens is not None:
+            return self._verify_once(active)
         b = self.batch
         step_idx = self.stats.decode_steps
         # selection refresh: each slot's own share-window cadence (so a
@@ -939,10 +1108,12 @@ class Engine:
         # keep non-active rows of the token feed: a slot that finished
         # prefilling THIS step already holds its first token, which this
         # dispatch (captured mask without it) must not clobber with the
-        # argmax of an inactive row's garbage logits
-        self._tok = jnp.where(act_dev,
-                              jnp.argmax(logits, axis=-1).astype(jnp.int32),
-                              self._tok)
+        # sample of an inactive row's garbage logits (the sampler's
+        # temp=0 lane IS argmax, so greedy rows stay bit-identical to
+        # the pre-sampling engine)
+        tok, b.samp_gen = self._sample(logits, b.samp_base, b.samp_gen,
+                                       b.samp_temp, b.samp_topp, act_dev)
+        self._tok = jnp.where(act_dev, tok, self._tok)
         self._trace.append(self._tok)
         self.trace_engine_steps.append(self.stats.engine_steps)
         self.stats.decode_steps += 1
@@ -960,6 +1131,81 @@ class Engine:
             # prefetch/spill for the NEXT share window, one window ahead
             # of the selection refresh that will consume the pages
             self._tier_refresh()
+
+    def _verify_once(self, active: np.ndarray):
+        """The speculative decode half of a step: draft k-1 tokens per
+        active slot (serving/draft.py), verify all k positions in ONE
+        chunked forward at the static (B, k) bucket, and emit each
+        slot's accepted prefix (always >= 1 token — the first coupled
+        target). Only accepted prefixes are appended (attend-before-
+        append), so there is never anything to roll back. ``max_emit``
+        clamps acceptance at the slot's next selection-refresh boundary
+        (phase hitting 0 mod share_window), its generation budget, and
+        capacity — so selection cadence stays a pure function of the
+        slot's own phase and the capacity invariant holds."""
+        b = self.batch
+        k = self.spec_tokens
+        w = self.share_window
+        need = active & (b.phase % w == 0)
+        if not np.array_equal(self._act_mirror, active):
+            self._act_dev = jnp.asarray(active)
+            self._act_mirror = active.copy()
+        act_dev = self._act_dev
+        drafted = self.draft.draft(self, active, k)
+        if k > 1:
+            tokens = jnp.concatenate(
+                [self._tok[:, None],
+                 jnp.asarray(drafted, jnp.int32)], axis=1)
+        else:
+            tokens = self._tok[:, None]
+        max_emit = np.ones((b.max_batch,), np.int64)
+        for slot in np.nonzero(active)[0]:
+            slot = int(slot)
+            r = int(b.phase[slot]) % w
+            window_left = (w - r) if r else w
+            max_emit[slot] = max(1, min(k, window_left,
+                                        int(b.remaining[slot]),
+                                        self.capacity - int(b.lengths[slot])))
+        targets, n_dev, next_dev, b.samp_gen, b.serve = self._verify(
+            self.params, b.serve, tokens, act_dev, jnp.asarray(need),
+            b.samp_base, b.samp_gen, b.samp_temp, b.samp_topp,
+            jnp.asarray(max_emit, jnp.int32))
+        self._tok = jnp.where(act_dev, next_dev, self._tok)
+        if need.any():
+            self.stats.select_steps += 1
+        else:
+            self.stats.reuse_steps += 1
+        # the trace gets k rows per verify step (the coupled targets);
+        # a slot that accepted n of them owns rows [base, base+n)
+        trace_base = len(self._trace)
+        for j in range(k):
+            self._trace.append(targets[:, j])
+            self.trace_engine_steps.append(self.stats.engine_steps)
+        self.stats.decode_steps += 1
+        self.stats.spec_steps += 1
+        self.stats.occupancy_sum += float(active.mean())
+        # the one host sync speculation adds: accepted counts (and the
+        # target tokens, for host-side draft history) per verify step
+        n_host, targets_host = jax.device_get((n_dev, targets))
+        need_hist = self.draft.needs_host_tokens
+        for slot in np.nonzero(active)[0]:
+            slot = int(slot)
+            nb = int(n_host[slot])
+            comp = self._live[slot]
+            comp._step_idx.extend(range(trace_base, trace_base + nb))
+            b.lengths[slot] += nb
+            b.phase[slot] += nb
+            b.remaining[slot] -= nb
+            self._spec_emitted[slot] += nb
+            self.stats.tokens_out += nb
+            self.stats.spec_slot_steps += 1
+            self.stats.spec_drafted += k - 1
+            self.stats.spec_accepted += nb
+            if need_hist:
+                self._spec_history[slot].extend(
+                    int(t) for t in targets_host[slot, :nb])
+            if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
+                self._retire(slot)
 
     def finalize(self):
         """Materialize completion tokens from the device-side trace.
@@ -1007,7 +1253,12 @@ class Engine:
 
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> Dict[int, Completion]:
-        """Drain: admit + step until queue and slots are empty."""
+        """Drain: admit + step until queue and slots are empty.
+
+        Returns a snapshot of the completions map: a later ``run()`` on
+        the same engine that reuses a uid replaces the entry in
+        ``self.completions`` but never mutates an earlier run's returned
+        dict (its Completion tokens are already materialized here)."""
         for r in requests or ():
             self.submit(r)
         t0 = time.time()
@@ -1016,7 +1267,7 @@ class Engine:
         jax.block_until_ready(self.batch.serve["length"])
         self.stats.wall_s += time.time() - t0
         self.finalize()
-        return self.completions
+        return dict(self.completions)
 
     def reset_metrics(self):
         """Zero stats/completions/trace between a warmup and a measured
@@ -1051,4 +1302,10 @@ class Engine:
             sizes["tier_gather"] = jit_cache_size(self._tier_gather)
             sizes["tier_spill"] = jit_cache_size(self._tier_spill)
             sizes["tier_fill"] = jit_cache_size(self._tier_fill)
+        sizes["sample"] = jit_cache_size(self._sample)
+        sizes["sample_one"] = jit_cache_size(self._sample_one)
+        if self.spec_tokens is not None:
+            sizes["verify"] = jit_cache_size(self._verify)
+            for name, n in self.draft.jit_cache_sizes().items():
+                sizes[f"draft_{name}"] = n
         return sizes

@@ -1,0 +1,120 @@
+"""Per-request stochastic sampling (temperature / top-p) for the engine.
+
+RNG ownership is the whole design: every sampled token's PRNG key is a
+pure function of ``(seed, Request.uid, generation index)`` —
+
+    base_g  = fold_in(PRNGKey(seed), uid)        # once per request
+    key_i   = fold_in(base_g, i)                 # i-th emitted token
+
+— never of the slot the request happens to occupy or the step the
+engine happens to dispatch. Token traces are therefore invariant to
+slot churn, admission order, and (with the coupled verify sampler in
+``runtime/serve.make_verify_step``) to ``Engine(spec_tokens=k)``:
+speculative and non-speculative runs consume the SAME key stream at the
+same generation indices, so they draw the same tokens
+(tests/test_sampling.py).
+
+Greedy decoding is the ``temperature == 0`` special case of the one
+compiled sampler (an in-graph ``where`` over the argmax lane — no
+per-request recompile, preserving the zero-post-warmup-recompile
+invariant). Keys are the legacy raw ``(2,)`` uint32 threefry keys —
+they vmap over the batch lane and fold_in composes in-graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+GREEDY_TEMP = 0.0      # temperature value meaning argmax
+_MIN_TEMP = 1e-6       # divisor guard for the (dead) stochastic lane
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy. Defaults reproduce greedy argmax."""
+
+    temperature: float = GREEDY_TEMP
+    top_p: float = 1.0
+    seed: int = 0
+
+    def validate(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        return self
+
+
+def request_key(seed: int, uid: int) -> Array:
+    """Base key of a request: fold_in(PRNGKey(seed), uid). Computed once
+    at admission (eagerly); per-token keys are derived in-graph."""
+    return jax.random.fold_in(jax.random.PRNGKey(int(seed)), int(uid))
+
+
+def token_key(base: Array, gen_idx) -> Array:
+    """Key of the ``gen_idx``-th emitted token (0 = the prefill token)."""
+    return jax.random.fold_in(base, gen_idx)
+
+
+def _sample_row(logits: Array, key: Array, temperature: Array,
+                top_p: Array) -> Array:
+    """Sample one token id from one (V,) logits row.
+
+    temperature == 0 -> argmax (bitwise the pre-sampling greedy path).
+    Otherwise: temperature-scaled log-softmax, nucleus (top-p) filter
+    (smallest prefix of the probability-sorted vocab whose mass reaches
+    top_p; the top token always survives), Gumbel-max draw with ``key``.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.maximum(temperature, _MIN_TEMP)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32) / t, axis=-1)
+    probs = jnp.exp(logp)
+    order = jnp.argsort(-probs)                      # descending prob
+    sorted_p = jnp.take(probs, order)
+    cum_before = jnp.cumsum(sorted_p) - sorted_p     # mass BEFORE each rank
+    keep_sorted = cum_before < top_p                 # rank 0 always kept
+    keep = jnp.zeros(logits.shape, bool).at[order].set(keep_sorted)
+    filtered = jnp.where(keep, logp, -jnp.inf)
+    g = jax.random.gumbel(key, logits.shape, dtype=jnp.float32)
+    stoch = jnp.argmax(filtered + g, axis=-1)
+    return jnp.where(temperature <= GREEDY_TEMP, greedy,
+                     stoch).astype(jnp.int32)
+
+
+def sample_tokens(logits: Array, base: Array, gen_idx: Array,
+                  temperature: Array, top_p: Array) -> Array:
+    """Batched sampler: logits (B, V), base keys (B, 2) uint32, gen_idx
+    (B,) int32, temperature/top_p (B,) -> token ids (B,) int32.
+
+    Key derivation happens in-graph (``fold_in(base_b, gen_b)``) so one
+    compiled program serves every step; the inputs that change per step
+    are plain (B,) vectors.
+    """
+    keys = jax.vmap(token_key)(base, gen_idx)
+    return jax.vmap(_sample_row)(logits, keys, temperature, top_p)
+
+
+def sample_chunk(logits: Array, base: Array, gen_idx: Array,
+                 temperature: Array, top_p: Array) -> Array:
+    """Verify-chunk sampler: logits (B, k, V) -> tokens (B, k) int32.
+
+    Row j of slot b is the target for generation index ``gen_b + j`` and
+    uses key ``fold_in(base_b, gen_b + j)`` — EXACTLY the key the
+    non-speculative sampler would use for that token, which is what makes
+    rejection sampling against these coupled targets lossless samplewise,
+    not just in distribution (docs/serving.md §Sampling).
+    """
+    k = logits.shape[1]
+    offs = jnp.arange(k, dtype=gen_idx.dtype)
+
+    def per_slot(row_logits, b_key, g0, t, p):
+        keys = jax.vmap(token_key, in_axes=(None, 0))(b_key, g0 + offs)
+        return jax.vmap(_sample_row, in_axes=(0, 0, None, None))(
+            row_logits, keys, t, p)
+
+    return jax.vmap(per_slot)(logits, base, gen_idx, temperature, top_p)

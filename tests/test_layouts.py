@@ -281,6 +281,80 @@ def test_layout_conformance_tiered(model, default_trace, name):
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
 
 
+def _sampled_workload(cfg, *, n=3, seed=2, temperature=0.8, top_p=0.9):
+    """The mixed churny workload with stochastic sampling params; RNG
+    keys are owned by (request.seed, uid), so the same list reproduces
+    the same trace on any engine configuration."""
+    import dataclasses
+
+    return [dataclasses.replace(r, temperature=temperature, top_p=top_p)
+            for r in _mixed_workload(cfg, seed=seed, n=n)]
+
+
+@pytest.fixture(scope="module")
+def sampled_trace(model):
+    """Reference stochastic tokens from the default layout."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24])
+    return {u: c.tokens for u, c in eng.run(_sampled_workload(cfg)).items()}
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_sampled(model, sampled_trace, name):
+    """Stochastic-sampling conformance, for free per registry entry:
+    per-request RNG key lanes make the sampled trace a function of
+    (seed, uid, generation index) only, so every layout must reproduce
+    the default layout's stochastic tokens exactly, with zero
+    post-warmup recompiles (temperature/top_p are jit INPUTS, so the
+    greedy and sampled paths share one compiled program)."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name)
+    mixed = eng.run(_sampled_workload(cfg))
+    assert sorted(mixed) == sorted(sampled_trace)
+    for uid in sorted(sampled_trace):
+        assert mixed[uid].tokens == sampled_trace[uid], (name, uid)
+    sizes0 = eng.jit_cache_sizes()
+    eng.reset_metrics()
+    eng.run(_sampled_workload(cfg, seed=11, n=2))
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_speculative(model, default_trace, sampled_trace,
+                                        name):
+    """Speculative-decode conformance, for free per registry entry: the
+    coupled rejection sampler makes Engine(spec_tokens=k) emit the
+    EXACT non-speculative trace — greedy (bit-identical argmax) AND
+    stochastic — under every layout, through the layout's own
+    verify_chunk/verify_append hooks. One engine serves both workloads:
+    the verify jit compiles for one static (B, k) bucket and must not
+    grow new entries when temperature flips from 0 to 0.8 or across
+    differently-shaped reruns (the zero-post-warmup-recompile invariant
+    with sampling + speculation enabled)."""
+    cfg, params = model
+    _, mixed_ref, _ = default_trace
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name, spec_tokens=4)
+    mixed = eng.run(_mixed_workload(cfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    assert eng.stats.spec_steps > 0
+    assert eng.stats.mean_accepted_len >= 1.0
+    sizes0 = eng.jit_cache_sizes()
+    assert sizes0["verify"] >= 1, name
+    eng.reset_metrics()
+    sampled = eng.run(_sampled_workload(cfg))
+    assert sorted(sampled) == sorted(sampled_trace)
+    for uid in sorted(sampled_trace):
+        assert sampled[uid].tokens == sampled_trace[uid], (name, uid)
+    # the greedy->stochastic flip and the rerun compiled NOTHING new:
+    # draft/verify/accept all reuse the warm bodies
+    assert eng.jit_cache_sizes() == sizes0, name
+
+
 @pytest.fixture(scope="module")
 def hybrid_model():
     """An attention+mamba2 hybrid: the recurrent chunk-resume path must
@@ -370,3 +444,58 @@ def test_layout_tiered_coplace_shmap_8dev():
                          timeout=520, cwd=REPO)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "TIERED_SHMAP_EXACT" in out.stdout
+
+
+SPEC_SHMAP_CODE = """
+import dataclasses
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serving import Engine
+from tests.test_layouts import _sampled_workload
+from tests.test_serving import CAP, _mixed_workload
+
+cfg = reduced(get_arch("smollm-360m"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+# greedy + stochastic references from the non-speculative default engine
+eng0 = Engine(cfg, params, max_batch=2, capacity=CAP, prompt_buckets=[16, 24])
+g0 = eng0.run(_mixed_workload(cfg, n=3))
+s0 = eng0.run(_sampled_workload(cfg))
+# the speculative engine under REAL shard_map co-placement: the verify
+# chunk flows through the layout's partial-attention body on 8 devices
+eng1 = Engine(cfg, params, max_batch=2, capacity=CAP, prompt_buckets=[16, 24],
+              layout="coplace_shmap", spec_tokens=4)
+g1 = eng1.run(_mixed_workload(cfg, n=3))
+assert sorted(g0) == sorted(g1)
+for uid in sorted(g0):
+    assert g0[uid].tokens == g1[uid].tokens, (
+        uid, g0[uid].tokens, g1[uid].tokens)
+assert eng1.stats.spec_steps > 0, "speculation never dispatched"
+sizes0 = eng1.jit_cache_sizes()
+assert sizes0["verify"] >= 1
+s1 = eng1.run(_sampled_workload(cfg))
+assert sorted(s0) == sorted(s1)
+for uid in sorted(s0):
+    assert s0[uid].tokens == s1[uid].tokens, (
+        uid, s0[uid].tokens, s1[uid].tokens)
+assert eng1.jit_cache_sizes() == sizes0, (sizes0, eng1.jit_cache_sizes())
+print("SPEC_SHMAP_EXACT")
+"""
+
+
+@pytest.mark.slow
+def test_layout_speculative_coplace_shmap_8dev():
+    """8-fake-device subprocess: the SPECULATIVE coplace_shmap engine —
+    the (B, k) verify chunk dispatched through shard_map partial
+    attention with pinned out-shardings — emits the non-speculative
+    default-layout trace bit-identically (greedy and stochastic), and
+    the greedy->stochastic flip plus rerun compile nothing new."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", SPEC_SHMAP_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=520, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SPEC_SHMAP_EXACT" in out.stdout
