@@ -48,6 +48,15 @@ latency percentiles) — the BENCH_serve.json artifact; scripts/ci.sh
 smokes this invocation so the perf trajectory is captured on every full
 CI run.
 
+``--rebalance`` adds the live slot-migration row pair: a churn workload
+(ragged prompts AND ragged budgets) served with rebalance off vs the
+retire-triggered planner (sched/cost.py + sched/rebalance.py). The
+rebalanced row must reproduce the off row token-for-token
+(``tokens_match_norebalance``) and strictly reduce the cost-model bank
+imbalance at the rebalance checks (``load_imbalance_pre`` vs
+``load_imbalance_post`` — the bench_bands.json imbalance gate), with
+the migration NoC traffic priced by hbsim.rebalance_overhead.
+
 ``--attn-impl pallas`` adds the ref-vs-pallas comparison row: the same
 workload is served a second time with the Pallas attention kernels
 (partial attention + fused combine under coplace_shmap; interpret mode
@@ -119,13 +128,15 @@ def make_lockstep_runner(cfg, params, *, capacity):
 def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
                reps=1, layout="default", admission="fifo", attn_impl="ref",
                prefill_chunk=None, hot_pages=None, spec_tokens=None,
-               draft="ngram", sampling=None):
+               draft="ngram", sampling=None, rebalance="off",
+               warm_requests=None):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=buckets, layout=layout, admission=admission,
                  impl=attn_impl, prefill_chunk=prefill_chunk,
-                 hot_pages=hot_pages, spec_tokens=spec_tokens, draft=draft)
+                 hot_pages=hot_pages, spec_tokens=spec_tokens, draft=draft,
+                 rebalance=rebalance)
     # sampling=(temperature, top_p) stamps every measured request; the
     # per-request RNG key is owned by (seed, uid), so the same request
     # list produces the same stochastic trace on ANY engine configuration
@@ -136,11 +147,19 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
         return [dataclass_copy(r, temperature=temp, top_p=topp)
                 for r in rs]
 
-    # warmup: touch every prompt bucket and both decode variants
-    warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
-                    max_new=cfg.h2eal.share_window + 2,
-                    temperature=temp, top_p=topp)
-            for i, b in enumerate(buckets)]
+    if warm_requests is not None:
+        # replay a full workload as warmup (uids offset out of the
+        # measured range): the rebalance rows need a warmup that
+        # actually MIGRATES, or the migrate jit would compile inside
+        # the measured phase and trip the no-recompile check
+        warm = [dataclass_copy(r, uid=10_000 + r.uid, temperature=temp,
+                               top_p=topp) for r in warm_requests]
+    else:
+        # warmup: touch every prompt bucket and both decode variants
+        warm = [Request(uid=10_000 + i, prompt=np.zeros((b,), np.int32),
+                        max_new=cfg.h2eal.share_window + 2,
+                        temperature=temp, top_p=topp)
+                for i, b in enumerate(buckets)]
     eng.run(warm)
     warm_sizes = eng.jit_cache_sizes()
 
@@ -183,6 +202,16 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
             "tier_spills": s.tier_spills, "tier_fills": s.tier_fills,
             "tier_prefetch": s.tier_prefetch,
             "tier_hit_rate": s.tier_hit_rate,
+        })
+    if rebalance != "off":
+        out.update({
+            "rebalance": rebalance,
+            "rebalance_checks": s.rebalance_checks,
+            "rebalances": s.rebalances,
+            "migrations": s.migrations,
+            "migrated_tokens": s.migrated_tokens,
+            "load_imbalance_pre": s.imbalance_pre,
+            "load_imbalance_post": s.imbalance_post,
         })
     return out
 
@@ -341,7 +370,7 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
         gen_max=40, seed=0, reps=3, layout="default", layouts=None,
         attn_impl=None, json_path=None, prefill_chunk=None,
         arrival="batch", arrival_rate=0.5, tiered_hot_pages=None,
-        spec_tokens=None, sampling=None):
+        spec_tokens=None, sampling=None, rebalance=False):
     """Lockstep vs ragged at equal token budget, per layout (x impl).
 
     ``layouts`` is an iterable of core/layouts registry names (default:
@@ -367,6 +396,16 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
     ``sampling=(temperature, top_p)`` adds stochastic rows: a sampled
     non-spec row per layout and (with ``spec_tokens``) a sampled
     speculative row token-matched against it.
+
+    ``rebalance=True`` adds the rebalancing row pair: a CHURN workload
+    (ragged prompts AND ragged budgets, so retirements leave the batch
+    skewed) served twice — Engine(rebalance="off") vs "retire" — with a
+    ``tokens_match_norebalance`` exact check, the migration counters,
+    and ``load_imbalance_pre``/``load_imbalance_post`` (the cost-model
+    bank imbalance at each rebalance check, before/after the applied
+    plan — the strict-reduction gate in bench_bands.json). Both engines
+    warm up on a replay of the same workload so the migrate jit
+    compiles before the measured phase.
     """
     from repro.configs import get_arch, reduced
     from repro.core import layouts as layoutlib
@@ -649,6 +688,59 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
                   f"{base_n['tokens_per_s']:.2f},speedup,{ratio:.2f},"
                   f"tokens_match_nonspec,{match}")
 
+    if rebalance:
+        # rebalancing row pair: the churn workload mixes short/long
+        # prompts with short/long budgets at seed-determined positions,
+        # so early retirements leave heavy slots clustered in one bank —
+        # the drift the retire-triggered planner exists to undo. Served
+        # twice (rebalance off vs retire) with identical requests: the
+        # trace must match token-for-token (migration moves cache rows
+        # verbatim; sampling keys are (seed, uid)-owned), and the mean
+        # cost-model bank imbalance at the rebalance checks must drop
+        # strictly (the bench_bands.json imbalance gate).
+        from repro.hbsim import sim as hbsim
+
+        rb_buckets = [8, 16, 24]
+        rb_gen_max = 19
+        rb_cap = max(rb_buckets) + rb_gen_max + cfg.h2eal.page_size
+        rb_reqs = build_requests(cfg, n=12, buckets=rb_buckets,
+                                 gen_min=3, gen_max=rb_gen_max, seed=seed)
+        base_rb = run_engine(cfg, params, rb_reqs, max_batch=4,
+                             capacity=rb_cap, buckets=rb_buckets,
+                             reps=reps, warm_requests=rb_reqs)
+        reb = run_engine(cfg, params, rb_reqs, max_batch=4,
+                         capacity=rb_cap, buckets=rb_buckets, reps=reps,
+                         rebalance="retire", warm_requests=rb_reqs)
+        match = reb["tokens"] == base_rb["tokens"]
+        modeled = hbsim.rebalance_overhead(
+            cfg, migrations=reb["migrations"],
+            migrated_tokens=reb["migrated_tokens"],
+            decode_steps=reb["decode_steps"])
+        rows.append(_row("ragged", "default", "ref", base_rb,
+                         extra={"workload": "churn"}))
+        rows.append(_row("ragged", "default", "ref", reb, extra={
+            "workload": "churn+rb", "rebalance": "retire",
+            "tokens_match_norebalance": match,
+            "migrations": reb["migrations"],
+            "rebalances": reb["rebalances"],
+            "rebalance_checks": reb["rebalance_checks"],
+            "load_imbalance_pre": reb["load_imbalance_pre"],
+            "load_imbalance_post": reb["load_imbalance_post"],
+            "rebalance_modeled": modeled}))
+        out["rebalance"] = {"norebalance": base_rb, "rebalanced": reb,
+                            "tokens_match_norebalance": match,
+                            "rebalance_modeled": modeled}
+        if csv:
+            print(f"serve_throughput,rebalance,retire,migrations,"
+                  f"{reb['migrations']},applied,{reb['rebalances']},"
+                  f"imbalance_pre,{reb['load_imbalance_pre']:.3f},"
+                  f"imbalance_post,{reb['load_imbalance_post']:.3f},"
+                  f"tok_s,{reb['tokens_per_s']:.2f},norebalance_tok_s,"
+                  f"{base_rb['tokens_per_s']:.2f},"
+                  f"tokens_match_norebalance,{match},"
+                  f"recompiled_after_warmup,"
+                  f"{reb['recompiled_after_warmup']}")
+
     # back-compat single-layout view (deprecated alias, one release)
     first = out["layouts"][names[0]]
     out.update({"ragged": first["ragged"], "speedup": first["speedup"],
@@ -725,6 +817,12 @@ if __name__ == "__main__":
                          "(per-request RNG keys; with --spec-tokens also "
                          "a sampled speculative row token-matched "
                          "against the sampled non-spec row)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="add the rebalancing row pair: a churn workload "
+                         "served with Engine(rebalance='off') vs "
+                         "'retire' — tokens_match_norebalance exact "
+                         "check, migration counters, and the "
+                         "load_imbalance_pre/post strict-reduction gate")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable row list (tok/s per "
                          "layout x impl x admission mode, occupancy, "
@@ -742,4 +840,5 @@ if __name__ == "__main__":
         json_path=a.json, prefill_chunk=a.prefill_chunk or None,
         arrival=a.arrival, arrival_rate=a.arrival_rate,
         tiered_hot_pages=a.tiered_hot_pages or None,
-        spec_tokens=a.spec_tokens or None, sampling=samp)
+        spec_tokens=a.spec_tokens or None, sampling=samp,
+        rebalance=a.rebalance)

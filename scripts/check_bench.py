@@ -52,10 +52,41 @@ BANDS = os.path.join(REPO, "benchmarks", "bench_bands.json")
 
 BANDED = ("tokens_per_s", "ttft_p50_s", "ttft_p99_s")
 EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref",
-              "tokens_match_resident", "tokens_match_nonspec")
+              "tokens_match_resident", "tokens_match_nonspec",
+              "tokens_match_norebalance")
+
+# fields every bench row MUST carry for keying — a rename in
+# benchmarks/serve_throughput.py._row() otherwise surfaced as a raw
+# KeyError deep inside this script
+ROW_KEY_FIELDS = ("mode", "layout", "impl")
+# minimum schema of one bench_trend.jsonl row (validated on
+# --append-trend so a schema drift fails loudly at append time, not
+# when a later reader chokes on the file)
+TREND_SCHEMA = {"commit": str, "tokens_per_s": dict}
+
+
+def _schema_fail(msg):
+    raise SystemExit(f"check_bench: SCHEMA {msg}")
+
+
+def _require(mapping, key, where, hint=""):
+    """Named, actionable lookup: a missing/renamed key names the file
+    and the expected field instead of raising a bare KeyError."""
+    if key not in mapping:
+        _schema_fail(f"{where} is missing required key {key!r}"
+                     + (f" — {hint}" if hint else ""))
+    return mapping[key]
 
 
 def row_key(row):
+    missing = [f for f in ROW_KEY_FIELDS if f not in row]
+    if missing:
+        _schema_fail(
+            f"bench row is missing key field(s) {missing} "
+            f"(row has: {sorted(row)[:12]}); "
+            "benchmarks/serve_throughput.py._row() must emit "
+            f"{list(ROW_KEY_FIELDS)} — a rename needs a matching update "
+            "here AND in the benchmarks/bench_bands.json row keys")
     # sampled / speculative rows (PR 8) select their own compiled
     # configuration (sample + verify jits), so they key separately:
     # "greedy" vs "t<temp>,p<top_p>", spec-k, and the dedicated
@@ -77,10 +108,19 @@ def check(bench_path=BENCH, bands_path=BANDS):
         bench = json.load(f)
     with open(bands_path) as f:
         bands = json.load(f)
-    rows = {row_key(r): r for r in bench["rows"]}
+    band = _require(bands, "band", bands_path,
+                    "the multiplicative band-factor table "
+                    "{metric: [lo, hi]} with a 'default' entry")
+    _require(band, "default", f"{bands_path} 'band'",
+             "the fallback [lo, hi] pair for metrics without their own")
+    band_rows = _require(bands, "rows", bands_path,
+                         "the {row_key: {metric: ref}} reference table; "
+                         "regenerate with --update")
+    rows = {row_key(r): r for r in _require(bench, "rows", bench_path,
+                                            "the benchmark row list")}
     errors = []
 
-    for key, ref in bands["rows"].items():
+    for key, ref in band_rows.items():
         row = rows.get(key)
         if row is None:
             errors.append(f"{key}: banded row missing from {bench_path}")
@@ -93,7 +133,7 @@ def check(bench_path=BENCH, bands_path=BANDS):
         for metric, value in ref.items():
             if metric not in BANDED or metric not in row:
                 continue
-            lo, hi = bands["band"].get(metric, bands["band"]["default"])
+            lo, hi = band.get(metric, band["default"])
             if not (value * lo <= row[metric] <= value * hi):
                 errors.append(
                     f"{key}: {metric}={row[metric]:.4g} outside "
@@ -104,16 +144,49 @@ def check(bench_path=BENCH, bands_path=BANDS):
     # pre-fused-gather regime (it used to run ~7x slower than packed —
     # attend-before-append plus the fused kernel body closed most of it)
     for gate in bands.get("ratio_gates", []):
-        num, den = rows.get(gate["row"]), rows.get(gate["vs"])
+        where = f"{bands_path} ratio_gates entry"
+        gkey = _require(gate, "row", where)
+        gvs = _require(gate, "vs", where)
+        gmin = _require(gate, "min_ratio", where)
+        num, den = rows.get(gkey), rows.get(gvs)
         if num is None or den is None:
-            errors.append(f"ratio gate {gate['row']} vs {gate['vs']}: "
-                          f"row missing")
+            errors.append(f"ratio gate {gkey} vs {gvs}: row missing")
+            continue
+        if "tokens_per_s" not in num or "tokens_per_s" not in den:
+            errors.append(f"ratio gate {gkey} vs {gvs}: a row lacks "
+                          "tokens_per_s")
             continue
         ratio = num["tokens_per_s"] / den["tokens_per_s"]
-        if ratio < gate["min_ratio"]:
+        if ratio < gmin:
             errors.append(
-                f"{gate['row']}: tokens_per_s is {ratio:.3f}x of "
-                f"{gate['vs']} (gate: >= {gate['min_ratio']}x) — "
+                f"{gkey}: tokens_per_s is {ratio:.3f}x of "
+                f"{gvs} (gate: >= {gmin}x) — "
+                f"{gate.get('why', '')}")
+
+    # rebalance gate: a row serving the churn workload with
+    # Engine(rebalance=...) must report its mean device-compute
+    # imbalance REDUCED vs the same run's pre-check value
+    # (benchmarks/serve_throughput.py --rebalance emits the pair)
+    for gate in bands.get("imbalance_gates", []):
+        where = f"{bands_path} imbalance_gates entry"
+        gkey = _require(gate, "row", where)
+        row = rows.get(gkey)
+        if row is None:
+            errors.append(f"imbalance gate {gkey}: row missing from "
+                          f"{bench_path}")
+            continue
+        missing = [f for f in ("load_imbalance_pre", "load_imbalance_post")
+                   if f not in row]
+        if missing:
+            errors.append(f"imbalance gate {gkey}: row lacks {missing} "
+                          "(the --rebalance benchmark emits both)")
+            continue
+        pre, post = row["load_imbalance_pre"], row["load_imbalance_post"]
+        strict = bool(gate.get("strict", False))
+        if (post >= pre) if strict else (post > pre):
+            errors.append(
+                f"{gkey}: load_imbalance_post={post:.4f} not "
+                f"{'<' if strict else '<='} pre={pre:.4f} — "
                 f"{gate.get('why', '')}")
     return errors
 
@@ -138,11 +211,36 @@ def update(bench_path=BENCH, bands_path=BANDS):
           f"in {bands_path}")
 
 
+def validate_trend_row(entry, where):
+    """Hold one trend row against TREND_SCHEMA with named errors (a
+    stale or hand-mangled bench_trend.jsonl line fails at append time,
+    naming the line — not when a later reader chokes)."""
+    if not isinstance(entry, dict):
+        _schema_fail(f"{where}: trend row must be a JSON object, got "
+                     f"{type(entry).__name__}")
+    for key, typ in TREND_SCHEMA.items():
+        if key not in entry:
+            _schema_fail(f"{where}: trend row is missing required key "
+                         f"{key!r} (schema keys: "
+                         f"{sorted(TREND_SCHEMA)}); regenerate the row "
+                         "or migrate the file")
+        if not isinstance(entry[key], typ):
+            _schema_fail(f"{where}: trend key {key!r} must be "
+                         f"{typ.__name__}, got "
+                         f"{type(entry[key]).__name__}")
+    for k, v in entry["tokens_per_s"].items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            _schema_fail(f"{where}: tokens_per_s[{k!r}] must be a "
+                         f"number, got {type(v).__name__}")
+
+
 def append_trend(trend_path, bench_path=BENCH):
     """Append one JSONL trend row for the current commit: every bench
-    row's tokens_per_s plus the tiered-residency counters. Re-running on
-    the same commit replaces that commit's row, so each PR contributes
-    exactly one line to the trajectory file."""
+    row's tokens_per_s plus the tiered-residency, speculative, and
+    rebalance counters. Re-running on the same commit replaces that
+    commit's row, so each PR contributes exactly one line to the
+    trajectory file. Every row — existing and new — is validated
+    against TREND_SCHEMA."""
     import subprocess
 
     with open(bench_path) as f:
@@ -173,10 +271,24 @@ def append_trend(trend_path, bench_path=BENCH):
         entry["spec"] = {k: spec[k] for k in (
             "spec_tokens", "draft", "mean_accepted_len", "steps_per_s",
             "speedup_vs_nonspec", "tokens_match_nonspec") if k in spec}
+    rb = next((r for r in bench["rows"]
+               if r.get("rebalance") not in (None, "off")), None)
+    if rb is not None:
+        entry["rebalance"] = {k: rb[k] for k in (
+            "rebalance", "migrations", "rebalances",
+            "load_imbalance_pre", "load_imbalance_post",
+            "tokens_match_norebalance") if k in rb}
+    validate_trend_row(entry, "new row")
     lines = []
     if os.path.exists(trend_path):
         with open(trend_path) as f:
             lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    for i, ln in enumerate(lines):
+        try:
+            parsed = json.loads(ln)
+        except json.JSONDecodeError as e:
+            _schema_fail(f"{trend_path}:{i + 1}: not valid JSON ({e})")
+        validate_trend_row(parsed, f"{trend_path}:{i + 1}")
     if lines and json.loads(lines[-1]).get("commit") == commit:
         lines = lines[:-1]            # refresh this commit's row
     lines.append(json.dumps(entry, sort_keys=True))

@@ -29,20 +29,23 @@ if [[ "${FAST:-0}" != "1" ]]; then
   # tiered-residency row pair at 2x oversubscribed page capacity, and
   # the sampling + speculative-decode rows: stochastic non-spec,
   # greedy + sampled spec (tokens_match_nonspec exact via the coupled
-  # rejection sampler), and the ngram-friendly workload pair carrying
-  # the spec >= non-spec tokens/s ratio gate)
+  # rejection sampler), the ngram-friendly workload pair carrying
+  # the spec >= non-spec tokens/s ratio gate, and the churn-workload
+  # rebalance pair: off vs retire-triggered live slot migration,
+  # token-exact with a strict imbalance-reduction gate)
   # -> BENCH_serve.json, held against the committed bands
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
       --prefill-chunk 8 --arrival poisson --attn-impl pallas \
       --tiered-hot-pages 9 --spec-tokens 4 --sampling 0.8,0.9 \
-      --json BENCH_serve.json
+      --rebalance --json BENCH_serve.json
   # perf gate: tokens/s and TTFT within the committed bands
   # (benchmarks/bench_bands.json), recompile flags and chunked/pallas/
-  # tiered/speculative token-match flags exact, chunked-vs-packed,
-  # tiered-vs-resident and speculative-vs-nonspec throughput ratio
-  # floors; on success, append this commit's row to the cross-PR perf
+  # tiered/speculative/rebalance token-match flags exact, chunked-vs-
+  # packed, tiered-vs-resident and speculative-vs-nonspec throughput
+  # ratio floors, the rebalance imbalance_post < imbalance_pre gate;
+  # on success, append this commit's row to the cross-PR perf
   # trajectory
   python scripts/check_bench.py --append-trend benchmarks/bench_trend.jsonl
   # ragged serving smoke rows on 8 fake devices, one per sharded layout
@@ -77,4 +80,48 @@ if [[ "${FAST:-0}" != "1" ]]; then
       --workload ragged --requests 4 --max-batch 2 \
       --prompt-buckets 16,24 --gen-min 2 --gen-max 6 \
       --prefill-chunk 8
+  # rebalance smoke on the 8-fake-device coplace_shmap layout: the churn
+  # workload with retire-triggered live slot migration must produce
+  # bit-identical per-uid tokens vs rebalance="off", actually migrate
+  # (rebalance_banks=2 — the default would clamp to max_batch banks =
+  # one slot per bank = permutation-only plans), and stay recompile-free
+  # after warmup (docs/serving.md "Rebalancing")
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH="src:${PYTHONPATH:+$PYTHONPATH:}." python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serving import Engine, Request
+
+cfg = reduced(get_arch("smollm-360m"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+def churn(seed=0, n=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n):
+        s = int(rng.choice([8, 16, 24]))
+        g = int(rng.integers(3, 20))
+        prompt = rng.integers(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=prompt, max_new=g))
+    return reqs
+
+kw = dict(max_batch=4, capacity=64, prompt_buckets=[8, 16, 24],
+          layout="coplace_shmap", admission="balanced")
+base = Engine(cfg, params, **kw).run(churn())
+eng = Engine(cfg, params, rebalance="retire", rebalance_banks=2, **kw)
+got = eng.run(churn())
+match = (sorted(base) == sorted(got)
+         and all(base[u].tokens == got[u].tokens for u in base))
+mig = eng.stats.migrations
+sizes0 = eng.jit_cache_sizes()
+eng.reset_metrics()
+eng.run(churn(seed=5))
+stable = eng.jit_cache_sizes() == sizes0
+print(f"ci,rebalance_smoke,tokens_match,{match},migrations,{mig},"
+      f"recompiled_after_warmup,{not stable}")
+assert match and stable and mig > 0
+EOF
 fi

@@ -3,5 +3,8 @@ from repro.hbsim.sim import (  # noqa: F401
     MODES,
     attention_decode,
     e2e_decode,
+    far_bank_transfer,
     gemm_decode,
+    rebalance_overhead,
+    tiered_serving_overhead,
 )

@@ -216,6 +216,31 @@ def tiered_serving_overhead(cfg: ArchConfig, *, fills: int, spills: int,
     }
 
 
+def rebalance_overhead(cfg: ArchConfig, *, migrations: int,
+                       migrated_tokens: int, decode_steps: int,
+                       hb: HBConfig = HBConfig()) -> Dict:
+    """Modeled NoC cost of a rebalanced serving run: converts the
+    engine's migration counters (EngineStats.migrations /
+    migrated_tokens; byte model runtime.perfmodel.migration_traffic_bytes)
+    into transfer time and energy, amortized per decode step. Migration
+    runs between engine steps — never inside one — so the time is
+    overlap-able link occupancy, not a decode stall; the cycle model
+    prices what each migration costs against the per-bank imbalance it
+    removes (EngineStats.imbalance_pre/post)."""
+    from repro.runtime import perfmodel
+
+    nbytes = perfmodel.migration_traffic_bytes(
+        cfg, migrations=migrations, migrated_tokens=migrated_tokens)
+    xfer = far_bank_transfer(nbytes, hb)
+    steps = max(int(decode_steps), 1)
+    return {
+        "migration_bytes": nbytes,
+        "transfer_s": xfer["latency_s"],
+        "energy_j": xfer["energy_j"],
+        "transfer_s_per_step": xfer["latency_s"] / steps,
+    }
+
+
 def gemm_decode(cfg: ArchConfig, hb: HBConfig = HBConfig()) -> Dict:
     """Non-attention (GEMM) cost of one decode token: weights are read
     once from the memory dies (batch=1 edge decode), compute on DCIM."""

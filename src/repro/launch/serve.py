@@ -32,6 +32,11 @@ page-sharding layout.
 (kernels/ops.py dispatch; interpret mode off-TPU) — including the
 partial-attention + fused-combine pair inside the coplace_shmap decode.
 The impl is fixed at engine construction, never switched per step.
+``--rebalance retire|interval`` arms live slot migration
+(sched/cost.py + sched/rebalance.py): the engine re-plans slot
+placement when retirements skew the per-bank compute and moves cache
+rows between slot indices without recompiling or changing any token
+(docs/serving.md §Rebalancing).
 
 CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
@@ -127,7 +132,8 @@ def make_ragged_requests(cfg, *, n: int, prompt_buckets, gen_min: int,
 def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
                prompt_buckets, report_balance: bool = False,
                layout="default", admission: str = "fifo",
-               attn_impl: str = "ref", prefill_chunk=None):
+               attn_impl: str = "ref", prefill_chunk=None,
+               rebalance: str = "off"):
     """Serve ``requests`` with the continuous-batching engine.
 
     ``layout`` is any core/layouts registry entry (e.g. "coplace_shmap"
@@ -138,8 +144,11 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
     (interpret mode off-TPU) — fixed at engine construction, never per
     step. ``prefill_chunk=N`` switches admission from prefill-then-pack
     to chunked slot-resident prefill (≤ N prompt tokens per engine step,
-    interleaved with decode — docs/serving.md). Returns
-    (completions, stats dict)."""
+    interleaved with decode — docs/serving.md). ``rebalance`` arms the
+    live slot-migration planner (sched/rebalance.py): "retire" re-plans
+    when a retirement frees a slot, "interval" every
+    ``rebalance_interval`` steps — token traces are bit-exact either way
+    (docs/serving.md §Rebalancing). Returns (completions, stats dict)."""
     from repro.core import layouts as layoutlib
     from repro.serving import Engine
 
@@ -152,7 +161,7 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=prompt_buckets, layout=layout,
                  admission=admission, impl=attn_impl,
-                 prefill_chunk=prefill_chunk)
+                 prefill_chunk=prefill_chunk, rebalance=rebalance)
     completions = eng.run(requests)
     s = eng.stats
     stats = {
@@ -169,6 +178,17 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
         "admission_reorders": s.admission_reorders,
         "jit_cache": eng.jit_cache_sizes(),
     }
+    if rebalance != "off":
+        stats["rebalance"] = {
+            "trigger": rebalance,
+            "checks": s.rebalance_checks,
+            "rebalances": s.rebalances,
+            "skipped": s.rebalance_skipped,
+            "migrations": s.migrations,
+            "migrated_tokens": s.migrated_tokens,
+            "imbalance_pre": s.imbalance_pre,
+            "imbalance_post": s.imbalance_post,
+        }
     if report_balance:
         stats["balance"] = _balance_report(cfg, eng)
     return completions, stats
@@ -177,8 +197,10 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
 def _balance_report(cfg, eng):
     """Score the engine's current/last ragged batch with the paper's
     tiling + co-placement load split on a 4x4 bank grid, plus the sharded
-    page-load view (device_page_loads) and the whole-slot LPT placement
-    (map_slots) the balanced admission policy optimizes against."""
+    page-load view (device_page_loads), the whole-slot LPT placement
+    (map_slots) the balanced admission policy optimizes against, and the
+    rebalancer's own per-bank cost-model view (sched/cost.py via
+    Engine.compute_loads) with its migration counters."""
     from repro.sched import (device_page_loads, grid_coords, imbalance,
                              load_imbalance, map_slots, ragged_loads,
                              slot_head_load, solve_tiling)
@@ -186,6 +208,14 @@ def _balance_report(cfg, eng):
     ctx = [int(c) for c in eng.batch.lengths if c > 0]
     s = eng.stats
     base = {"admissions": s.admissions, "prefill_chunks": s.prefill_chunks}
+    loads = eng.compute_loads()
+    if loads:
+        base["cost_loads"] = [round(x, 1) for x in loads]
+        base["cost_imbalance"] = load_imbalance(loads)
+    if eng.rebalance != "off":
+        base.update(migrations=s.migrations, rebalances=s.rebalances,
+                    imbalance_pre=s.imbalance_pre,
+                    imbalance_post=s.imbalance_post)
     if not ctx:
         return base
     coords = grid_coords(4, 4)[: cfg.num_kv_heads]
@@ -251,6 +281,12 @@ def main(argv=None):
                     default="fifo",
                     help="ragged admission order (balanced = per-device "
                          "page-load aware, sched/balance.py)")
+    ap.add_argument("--rebalance", choices=["off", "retire", "interval"],
+                    default="off",
+                    help="live slot-migration trigger (sched/rebalance.py): "
+                         "retire = re-plan when a retirement frees a slot, "
+                         "interval = every 16 engine steps. Token traces "
+                         "stay bit-exact (docs/serving.md §Rebalancing)")
     ap.add_argument("--attn-impl", choices=["ref", "pallas"], default="ref",
                     help="attention kernel impl (kernels/ops.py): ref = "
                          "pure-jnp oracle, pallas = Pallas kernels "
@@ -276,10 +312,11 @@ def main(argv=None):
             prompt_buckets=buckets, report_balance=args.report_balance,
             layout=args.layout, admission=args.admission,
             attn_impl=args.attn_impl,
-            prefill_chunk=args.prefill_chunk or None)
+            prefill_chunk=args.prefill_chunk or None,
+            rebalance=args.rebalance)
         print(f"[serve] arch={cfg.name} workload=ragged "
               f"layout={args.layout} admission={args.admission} "
-              f"attn_impl={args.attn_impl} "
+              f"attn_impl={args.attn_impl} rebalance={args.rebalance} "
               f"prefill_chunk={args.prefill_chunk or 'packed'} "
               f"requests={len(completions)} steps={stats['decode_steps']} "
               f"occupancy={stats['occupancy']:.2f} "
@@ -289,12 +326,25 @@ def main(argv=None):
               f"{stats['admissions']}/{stats['prefill_chunks']}; "
               f"admission reorders: {stats['admission_reorders']}; "
               f"jit compiles: {stats['jit_cache']}")
+        if "rebalance" in stats:
+            r = stats["rebalance"]
+            print(f"[serve] rebalance trigger={r['trigger']} "
+                  f"checks={r['checks']} applied={r['rebalances']} "
+                  f"skipped={r['skipped']} migrations={r['migrations']} "
+                  f"imbalance {r['imbalance_pre']:.3f} -> "
+                  f"{r['imbalance_post']:.3f}")
         if "balance" in stats and stats["balance"]:
-            print(f"[serve] bank imbalance naive="
-                  f"{stats['balance']['imbalance_naive']:.2f} "
-                  f"coplaced={stats['balance']['imbalance_coplaced']:.2f} "
-                  f"page_load={stats['balance']['page_load_imbalance']:.2f} "
-                  f"slot_lpt={stats['balance']['slot_lpt_imbalance']:.2f}")
+            bal = stats["balance"]
+            if "imbalance_naive" in bal:
+                print(f"[serve] bank imbalance naive="
+                      f"{bal['imbalance_naive']:.2f} "
+                      f"coplaced={bal['imbalance_coplaced']:.2f} "
+                      f"page_load={bal['page_load_imbalance']:.2f} "
+                      f"slot_lpt={bal['slot_lpt_imbalance']:.2f}")
+            if "cost_imbalance" in bal:
+                print(f"[serve] cost-model bank loads "
+                      f"{bal['cost_loads']} "
+                      f"(imbalance {bal['cost_imbalance']:.2f})")
         if completions:
             some = completions[min(completions)]
             print(f"[serve] sample tokens (uid {some.uid}): "

@@ -152,6 +152,40 @@ def tier_traffic_bytes(cfg: ArchConfig, *, fills: int, spills: int,
     return terms
 
 
+def migration_slot_bytes(cfg: ArchConfig, *, ctx: int) -> float:
+    """Wire bytes of moving ONE slot's cache row between slot indices
+    (serving.Engine._migrate_slot, planned by sched/rebalance.py):
+    K + V of the slot's live retrieval-head pages, the streaming-head
+    sink+local ring, and the per-page f32 selection metadata (tau
+    min/max d-vectors), summed over attention layers. The migrated
+    bytes cross banks, so the hbsim NoC-link model prices them
+    (hbsim.sim.rebalance_overhead) against the imbalance they remove."""
+    h2 = cfg.h2eal
+    hkv = cfg.num_kv_heads
+    nr = hkv - round(hkv * h2.static_sparsity) if h2.enabled else hkv
+    ns = hkv - nr
+    hd = cfg.resolved_head_dim
+    n_attn = len(cfg.attention_layers) or cfg.num_layers
+    pages = -(-int(ctx) // h2.page_size) if ctx > 0 else 0
+    paged_kv = 2 * pages * h2.page_size * hd * BF16 * nr
+    ring_kv = 2 * min(int(ctx), h2.sink + h2.local) * hd * BF16 * ns
+    meta = 2 * pages * hd * F32 * nr
+    return float((paged_kv + ring_kv + meta) * n_attn)
+
+
+def migration_traffic_bytes(cfg: ArchConfig, *, migrations: int,
+                            migrated_tokens: int) -> float:
+    """Total migration traffic of a serving run from the engine's
+    counters (EngineStats.migrations / migrated_tokens): each move is
+    priced at the mean migrated context length. All of it overlaps
+    decode (migration runs between steps, never inside one), so it
+    costs link occupancy and energy, not critical-path stalls."""
+    if migrations <= 0:
+        return 0.0
+    mean_ctx = migrated_tokens / migrations
+    return migrations * migration_slot_bytes(cfg, ctx=int(round(mean_ctx)))
+
+
 def prefill_bytes(cfg: ArchConfig, shape: ShapeConfig, mesh: MeshModel,
                   *, q_chunk: int = 1024) -> dict:
     """Prefill step, per device: activations dominate; chunked attention

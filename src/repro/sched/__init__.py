@@ -12,6 +12,18 @@ from repro.sched.tiling import (  # noqa: F401
     manhattan,
     solve_tiling,
 )
+from repro.sched.cost import (  # noqa: F401
+    CostModel,
+    SlotCost,
+    SlotView,
+    device_compute_loads,
+    slot_bank,
+)
+from repro.sched.rebalance import (  # noqa: F401
+    Migration,
+    RebalancePlan,
+    plan_rebalance,
+)
 from repro.sched.balance import (  # noqa: F401
     admission_score,
     balanced_loads,

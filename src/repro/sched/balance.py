@@ -223,7 +223,10 @@ def load_imbalance(vals: Sequence[float]) -> float:
 def admission_score(ctx_lengths: Sequence[int], candidate_ctx: int, *,
                     n_shards: int, page_size: int,
                     hot_cap: int | None = None,
-                    spec_tokens: int | None = None) -> float:
+                    spec_tokens: int | None = None,
+                    prefill_done: Sequence[int] | None = None,
+                    prefill_left: Sequence[int] | None = None,
+                    chunk_budget: int | None = None) -> float:
     """Per-device page-load imbalance of the batch AFTER admitting a
     request at context ``candidate_ctx`` next to the live ``ctx_lengths``.
     Lower is better; the engine admits the queued request minimizing it.
@@ -235,10 +238,36 @@ def admission_score(ctx_lengths: Sequence[int], candidate_ctx: int, *,
     step appends up to k tokens before the host can rebalance, so a slot
     sitting just below a page boundary WILL open its next page within
     the current chunk — the score sees the page the chunk commits, not
-    the one the host mirror shows."""
+    the one the host mirror shows.
+
+    Under chunked prefill, pass PREFILLING slots through
+    ``prefill_done``/``prefill_left`` (tokens fed / still to come)
+    instead of ``ctx_lengths``: they still count at their full eventual
+    page span (done + left — the residency they WILL reach), and the
+    score additionally sees the IN-FLIGHT prefill compute: one shared
+    ``chunk_budget`` is split across the prefilling slots and the
+    candidate (``chunk_allocation`` — the allocator the engine's mixed
+    step actually runs), and each granted slot adds one unit of load on
+    the device its next written page lands on. Two candidates with equal
+    eventual spans then split on WHERE their first chunks land — the
+    settled-page score alone cannot see that."""
     horizon = max(int(spec_tokens) - 1, 0) if spec_tokens else 0
+    done = [int(d) for d in (prefill_done or ())]
+    left = [int(t) for t in (prefill_left or ())]
+    assert len(done) == len(left), (done, left)
     ctxs = [int(c) + horizon for c in ctx_lengths]
+    ctxs.extend(d + t + horizon for d, t in zip(done, left))
     ctxs.append(int(candidate_ctx) + horizon)
     loads = device_page_loads(ctxs, n_shards=n_shards,
                               page_size=page_size, hot_cap=hot_cap)
+    if chunk_budget:
+        alloc = chunk_allocation(done + [0], left + [int(candidate_ctx)],
+                                 int(chunk_budget),
+                                 n_shards=max(int(n_shards), 1),
+                                 page_size=page_size)
+        feed = done + [0]
+        for i, grant in enumerate(alloc):
+            if grant > 0:
+                d = (feed[i] // page_size) % max(int(n_shards), 1)
+                loads[d] += 1
     return load_imbalance(loads)

@@ -120,6 +120,10 @@ class Completion:
     _slot: int = -1
     _seq: int = -1               # admission sequence (FIFO chunk order)
     _step_idx: List[int] = dataclasses.field(default_factory=list)
+    # slot index at which each trace row was emitted — recorded per row
+    # (not derived from _slot at finalize) so live migration between
+    # slot indices (Engine(rebalance=...)) never invalidates old rows
+    _slot_idx: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -145,6 +149,14 @@ class EngineStats:
     spec_slot_steps: int = 0     # per-slot verify events (accept samples)
     spec_drafted: int = 0        # draft tokens proposed (k-1 per event)
     spec_accepted: int = 0       # tokens emitted by verify steps (>= 1 each)
+    # dynamic rebalancing (Engine(rebalance=...); sched/rebalance.py):
+    rebalance_checks: int = 0    # planner invocations (post-cooldown)
+    rebalances: int = 0          # plans applied (>= 1 migration each)
+    rebalance_skipped: int = 0   # triggers rejected (cooldown/hysteresis)
+    migrations: int = 0          # slot moves executed
+    migrated_tokens: int = 0     # context tokens moved (traffic model)
+    imbalance_pre_sum: float = 0.0   # cost imbalance at each check
+    imbalance_post_sum: float = 0.0  # ... after the applied plan (if any)
 
     @property
     def prefills(self) -> int:
@@ -180,6 +192,20 @@ class EngineStats:
     def tier_hit_rate(self) -> float:
         seen = self.tier_hits + self.tier_misses
         return self.tier_hits / seen if seen else 1.0
+
+    @property
+    def imbalance_pre(self) -> float:
+        """Mean max/mean device-compute imbalance AT rebalance checks
+        (1.0 = perfectly balanced; 1.0 when no check ever ran)."""
+        return (self.imbalance_pre_sum / self.rebalance_checks
+                if self.rebalance_checks else 1.0)
+
+    @property
+    def imbalance_post(self) -> float:
+        """Same checks, scored after the applied plan (equals the pre
+        value whenever a check proposed no moves)."""
+        return (self.imbalance_post_sum / self.rebalance_checks
+                if self.rebalance_checks else 1.0)
 
 
 @dataclasses.dataclass
@@ -357,6 +383,27 @@ class Engine:
                   (host prompt-lookup, deterministic, default) or
                   ``"streaming"`` (self-draft on the model's streaming
                   heads). Ignored without ``spec_tokens``.
+    rebalance   : dynamic load rebalancing trigger — ``"off"`` (default),
+                  ``"retire"`` (re-plan when a slot retires: the moment
+                  drift appears), or ``"interval"`` (every
+                  ``rebalance_interval`` engine steps). A triggered check
+                  scores every live slot's next-step compute
+                  (sched/cost.CostModel: streaming/retrieval head mix,
+                  hot-capped page reads, spec-verify horizon, chunked
+                  prefill backlog) and migrates slots into free indices
+                  via greedy-LPT (sched/rebalance.plan_rebalance) when
+                  that flattens per-bank compute by at least
+                  ``rebalance_min_gain`` (hysteresis), at most once per
+                  ``rebalance_cooldown`` engine steps. Migration copies
+                  the slot's cache rows / sampling lanes / tier residency
+                  verbatim through ONE donated jit with dynamic indices
+                  — token traces are bit-exact and the zero-recompile
+                  invariant holds (docs/serving.md §Rebalancing).
+    rebalance_banks : bank count the compute loads aggregate over
+                  (contiguous slot-index blocks — the batch-axis sharding
+                  view). Default: the layout's ``balance_shards`` when
+                  sharded, else one bank per two slots (capped at 4) so
+                  LPT can pair heavy slots with light ones within a bank.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
@@ -368,7 +415,12 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  hot_pages: Optional[int] = None,
                  spec_tokens: Optional[int] = None,
-                 draft="ngram"):
+                 draft="ngram",
+                 rebalance: str = "off",
+                 rebalance_interval: int = 16,
+                 rebalance_min_gain: float = 0.02,
+                 rebalance_cooldown: int = 8,
+                 rebalance_banks: Optional[int] = None):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
 
@@ -442,6 +494,34 @@ class Engine:
                     f"spec_tokens={self.spec_tokens} must be in "
                     f"[1, h2eal.local={cfg.h2eal.local}]")
             self.draft = draftlib.resolve_draft(draft)
+        if rebalance not in ("off", "retire", "interval"):
+            raise ValueError(
+                f"rebalance={rebalance!r}: valid triggers are "
+                "'off', 'retire', 'interval'")
+        self.rebalance = rebalance
+        self.rebalance_interval = max(int(rebalance_interval), 1)
+        self.rebalance_min_gain = float(rebalance_min_gain)
+        self.rebalance_cooldown = max(int(rebalance_cooldown), 0)
+        if rebalance_banks is not None:
+            self.rebalance_banks = min(max(int(rebalance_banks), 1),
+                                       int(max_batch))
+        else:
+            # one bank per TWO slot indices: a bank block must hold at
+            # least two slots for LPT to pair a heavy slot with a light
+            # one (n_banks == max_batch degenerates to pure permutations
+            # — zero gain, always rejected by hysteresis)
+            nb = (self.plan.balance_shards if self.plan.balance_shards > 1
+                  else max(min(int(max_batch) // 2, 4), 1))
+            self.rebalance_banks = min(nb, int(max_batch))
+        self._cost_model = None
+        if self.rebalance != "off":
+            from repro.sched.cost import CostModel
+            self._cost_model = CostModel.from_config(
+                cfg, hot_cap=int(hot_pages) if hot_pages else None,
+                spec_tokens=int(spec_tokens) if spec_tokens else 0,
+                chunk_budget=self.prefill_chunk or 0)
+        self._rebalance_due = False
+        self._last_rebalance_step = -(1 << 30)
         scfg = serve_rt.ServeConfig(capacity=self.cache_capacity,
                                     layout=self.layout, impl=self.attn_impl)
         self._prefill = jax.jit(serve_rt.make_prefill(cfg, scfg))
@@ -510,6 +590,46 @@ class Engine:
                                          gen[None], temp[None],
                                          topp[None])[0]
         self._sample_one = jax.jit(_sample_one_fn)
+        self._migrate = None
+        if self.rebalance != "off":
+            # live slot migration (sched/rebalance.py): copy every
+            # serve-state row src→dst (the _pack_slot leaf-axis
+            # conventions), clear src to the empty sentinels (the
+            # _reset_slot body), and move the sampling lanes + pending
+            # token feed alongside — ONE donated jit with dynamic
+            # indices, so any number of moves reuses a single compiled
+            # entry. The token feed is NOT donated: _trace rows alias
+            # the same array and finalize() reads them later.
+            def _migrate_fn(big, tok, base, temp, topp, gen, src, dst):
+                def move(path, bg):
+                    ps = jax.tree_util.keystr(path)
+                    if ps.endswith("['length']"):
+                        row = jax.lax.dynamic_slice(bg, (src,), (1,))
+                        return jax.lax.dynamic_update_slice(bg, row,
+                                                            (dst,))
+                    axis = 1 if "['blocks']" in ps else 0
+                    sizes = bg.shape[:axis] + (1,) + bg.shape[axis + 1:]
+                    s0 = (0,) * axis + (src,) + (0,) * (bg.ndim - axis - 1)
+                    d0 = (0,) * axis + (dst,) + (0,) * (bg.ndim - axis - 1)
+                    row = jax.lax.dynamic_slice(bg, s0, sizes)
+                    return jax.lax.dynamic_update_slice(bg, row, d0)
+                big = jax.tree_util.tree_map_with_path(move, big)
+                big = _reset_slot(big, src)
+
+                def lane(a, fill=0):
+                    row = jax.lax.dynamic_slice_in_dim(a, src, 1, 0)
+                    a = jax.lax.dynamic_update_slice_in_dim(a, row, dst, 0)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        a, jnp.full(row.shape, fill, a.dtype), src, 0)
+                return (big, lane(tok), lane(base), lane(temp),
+                        lane(topp, 1), lane(gen))
+            mig_shard = {}
+            if self.plan.shard_state:
+                mig_shard = {"out_shardings":
+                             (ss, rep, rep, rep, rep, rep)}
+            self._migrate = jax.jit(_migrate_fn,
+                                    donate_argnums=(0, 2, 3, 4, 5),
+                                    **mig_shard)
         self._samp_host: Dict[int, tuple] = {}   # slot -> (base, t, p)
         self._verify = None
         if self.spec_tokens is not None:
@@ -941,6 +1061,11 @@ class Engine:
         comp = self._live.pop(slot)
         comp.finished_step = self.stats.decode_steps
         self.completions[comp.uid] = comp
+        if self.rebalance == "retire":
+            # drift just appeared: re-plan at the END of this step (not
+            # here — a retire can fire mid-step with a pending tier plan
+            # and a captured active mask still in flight)
+            self._rebalance_due = True
 
     def _pick_request(self) -> Request:
         """Next request to admit. FIFO by default; ``balanced`` scores the
@@ -954,19 +1079,27 @@ class Engine:
             return self._queue.popleft()
         from repro.sched import balance
         b = self.batch
-        # score prefilling slots at the page load they WILL reach (fed
-        # tokens + prompt still to come), not the fed count alone — a
-        # freshly chunk-admitted long prompt shows length 0 but will
-        # occupy its full page span within ceil(S/chunk) steps
-        live = [int(b.lengths[i]) + int(b.prompt_left[i])
-                for i in range(b.max_batch)
-                if b.active[i] or b.prefilling[i] or b.ready[i]]
+        # score decoding/ready slots at the page load they WILL reach
+        # (fed tokens + prompt still to come); PREFILLING slots go in as
+        # (done, left) pairs so the score also sees the in-flight chunk
+        # compute they and the candidate will contend for — a freshly
+        # chunk-admitted long prompt shows length 0 but will occupy its
+        # full page span within ceil(S/chunk) steps
+        live, pre_done, pre_left = [], [], []
+        for i in range(b.max_batch):
+            if b.prefilling[i]:
+                pre_done.append(int(b.lengths[i]))
+                pre_left.append(int(b.prompt_left[i]))
+            elif b.active[i] or b.ready[i]:
+                live.append(int(b.lengths[i]) + int(b.prompt_left[i]))
         best_i, best_s = 0, None
         for i in range(min(self.admit_lookahead, len(self._queue))):
             s = balance.admission_score(
                 live, len(self._queue[i].prompt), n_shards=n_shards,
                 page_size=self.cfg.h2eal.page_size,
-                hot_cap=self.hot_pages, spec_tokens=self.spec_tokens)
+                hot_cap=self.hot_pages, spec_tokens=self.spec_tokens,
+                prefill_done=pre_done, prefill_left=pre_left,
+                chunk_budget=self.prefill_chunk)
             if best_s is None or s < best_s - 1e-12:
                 best_i, best_s = i, s
         if best_i == 0:
@@ -1076,6 +1209,132 @@ class Engine:
                         self._finish_prefill(slot, logits_c)
             if active.any():
                 self._decode_once(active)
+        if self._cost_model is not None:
+            self._maybe_rebalance()
+
+    # ------------------------------------------------------------------
+    # dynamic rebalancing (sched/cost.py + sched/rebalance.py)
+    # ------------------------------------------------------------------
+
+    def _slot_views(self):
+        """Cost-model snapshot of every occupied slot (host mirrors
+        only — building views never syncs the device)."""
+        from repro.sched.cost import SlotView
+        b = self.batch
+        views = []
+        for i in range(b.max_batch):
+            if b.prefilling[i]:
+                ph = "prefill"
+            elif b.ready[i]:
+                ph = "ready"
+            elif b.active[i]:
+                ph = "decode"
+            else:
+                continue
+            views.append(SlotView(slot=i, uid=int(b.uid[i]),
+                                  ctx=int(b.lengths[i]),
+                                  prompt_left=int(b.prompt_left[i]),
+                                  phase=ph))
+        return views
+
+    def compute_loads(self) -> List[float]:
+        """Per-bank next-step compute loads of the live slots under the
+        cost model (``rebalance_banks`` contiguous slot-index blocks;
+        works with any ``rebalance`` setting — the balance report uses
+        it on plain engines too)."""
+        from repro.sched.cost import CostModel, device_compute_loads
+        cm = self._cost_model or CostModel.from_config(
+            self.cfg, hot_cap=self.hot_pages,
+            spec_tokens=self.spec_tokens or 0,
+            chunk_budget=self.prefill_chunk or 0)
+        costs = cm.slot_costs(self._slot_views(),
+                              n_shards=self.plan.page_stripe_shards)
+        return device_compute_loads(
+            costs, n_banks=self.rebalance_banks,
+            max_batch=self.batch.max_batch,
+            page_stripe_shards=self.plan.page_stripe_shards)
+
+    def _maybe_rebalance(self):
+        """End-of-step rebalance check: score the live slots' next-step
+        compute, plan migrations (greedy-LPT into free indices), apply
+        when the plan clears the hysteresis gate. Runs only when due
+        (a retirement this step, or the interval boundary) and outside
+        the cooldown window."""
+        due = self._rebalance_due
+        if (self.rebalance == "interval" and self.stats.engine_steps
+                % self.rebalance_interval == 0):
+            due = True
+        if not due:
+            return
+        self._rebalance_due = False
+        if (self.stats.engine_steps - self._last_rebalance_step
+                < self.rebalance_cooldown):
+            self.stats.rebalance_skipped += 1
+            return
+        from repro.sched.rebalance import plan_rebalance
+        b = self.batch
+        views = self._slot_views()
+        if len(views) < 2:
+            return
+        stripes = self.plan.page_stripe_shards
+        costs = self._cost_model.slot_costs(views, n_shards=stripes)
+        plan = plan_rebalance(
+            costs, b.free_slots(), n_banks=self.rebalance_banks,
+            max_batch=b.max_batch, page_stripe_shards=stripes,
+            min_gain=self.rebalance_min_gain)
+        self.stats.rebalance_checks += 1
+        self.stats.imbalance_pre_sum += plan.imbalance_before
+        self.stats.imbalance_post_sum += plan.imbalance_after
+        if not plan.moves:
+            self.stats.rebalance_skipped += 1
+            return
+        for mv in plan.moves:
+            self._migrate_slot(mv.src, mv.dst)
+        self._last_rebalance_step = self.stats.engine_steps
+        self.stats.rebalances += 1
+
+    def _migrate_slot(self, src: int, dst: int):
+        """Move the occupant of slot index ``src`` into the FREE index
+        ``dst``: one donated jit copies the serve-state rows, sampling
+        lanes, and pending token feed verbatim and clears ``src`` to the
+        empty sentinels; host mirrors, far-store keys, and completion
+        bookkeeping re-key alongside. Cache contents move bit-exact and
+        sampling keys are owned by (seed, uid) — never the slot index —
+        so token traces are unchanged (tests/test_rebalance.py)."""
+        b = self.batch
+        assert src != dst and b.uid[src] != -1 and b.uid[dst] == -1, (
+            src, dst)
+        with self._mesh_ctx():
+            (b.serve, self._tok, b.samp_base, b.samp_temp, b.samp_topp,
+             b.samp_gen) = self._migrate(
+                b.serve, self._tok, b.samp_base, b.samp_temp,
+                b.samp_topp, b.samp_gen, jnp.int32(src), jnp.int32(dst))
+        for arr, clear in ((b.active, False), (b.prefilling, False),
+                           (b.ready, False), (b.lengths, 0),
+                           (b.phase, 0), (b.uid, -1), (b.remaining, 0),
+                           (b.prompt_left, 0)):
+            arr[dst] = arr[src]
+            arr[src] = clear
+        if src in self._samp_host:
+            self._samp_host[dst] = self._samp_host.pop(src)
+        if src in self._prompts:
+            self._prompts[dst] = self._prompts.pop(src)
+        if self.spec_tokens is not None:
+            if src in self._spec_history:
+                self._spec_history[dst] = self._spec_history.pop(src)
+            self._spec_emitted[dst] = self._spec_emitted[src]
+            self._spec_emitted[src] = 0
+        if self._tier is not None:
+            t = self._tier
+            t.resident[dst] = t.resident[src].copy()
+            for s, p in [k for k in t.far if k[0] == src]:
+                t.far[(dst, p)] = t.far.pop((s, p))
+            t.reset_slot(src)
+        comp = self._live.pop(src)
+        comp._slot = dst
+        self._live[dst] = comp
+        self.stats.migrations += 1
+        self.stats.migrated_tokens += int(b.lengths[dst])
 
     def _decode_once(self, active: np.ndarray):
         """The decode half of a step, over the captured ``active`` mask
@@ -1123,6 +1382,7 @@ class Engine:
             b.phase[slot] += 1
             comp = self._live[slot]
             comp._step_idx.append(step_idx)
+            comp._slot_idx.append(int(slot))
             self.stats.tokens_out += 1
             b.remaining[slot] -= 1
             if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
@@ -1193,6 +1453,7 @@ class Engine:
             nb = int(n_host[slot])
             comp = self._live[slot]
             comp._step_idx.extend(range(trace_base, trace_base + nb))
+            comp._slot_idx.extend([slot] * nb)
             b.lengths[slot] += nb
             b.phase[slot] += nb
             b.remaining[slot] -= nb
@@ -1219,7 +1480,10 @@ class Engine:
             if comp.tokens or comp._first_tok is None:
                 continue  # already materialized / still prefilling
             toks = [int(np.asarray(comp._first_tok))]
-            toks.extend(int(trace[t, comp._slot]) for t in comp._step_idx)
+            # rows are read at the slot each was EMITTED in — a later
+            # migration of the slot never invalidates earlier rows
+            toks.extend(int(trace[t, s]) for t, s in
+                        zip(comp._step_idx, comp._slot_idx))
             comp.tokens = toks
 
     def busy(self) -> bool:
@@ -1279,6 +1543,11 @@ class Engine:
         self.trace_engine_steps.clear()
         self.completions = {}
         self.stats = EngineStats()
+        # the cooldown window is measured in engine_steps, which just
+        # restarted from 0 — an un-reset watermark would block every
+        # rebalance of the measured phase behind a negative delta
+        self._last_rebalance_step = -(1 << 30)
+        self._rebalance_due = False
 
     # ------------------------------------------------------------------
     # introspection
@@ -1304,6 +1573,8 @@ class Engine:
             sizes["tier_fill"] = jit_cache_size(self._tier_fill)
         sizes["sample"] = jit_cache_size(self._sample)
         sizes["sample_one"] = jit_cache_size(self._sample_one)
+        if self.rebalance != "off":
+            sizes["migrate"] = jit_cache_size(self._migrate)
         if self.spec_tokens is not None:
             sizes["verify"] = jit_cache_size(self._verify)
             for name, n in self.draft.jit_cache_sizes().items():

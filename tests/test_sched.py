@@ -105,3 +105,89 @@ def test_head_load_model():
     assert s == 260
     assert r > 4096  # dominated by the selected tokens
     assert r / s > 10  # the imbalance the paper's Fig 11 shows
+
+
+# ---------------------------------------------------------------------------
+# map_slots (greedy-LPT whole-slot placement) edge cases — the rebalance
+# planner (sched/rebalance.py) uses its assignment as the migration target,
+# so degenerate inputs must stay well-defined and deterministic.
+# ---------------------------------------------------------------------------
+
+def _assert_partition(asn, n_slots):
+    placed = sorted(s for bank in asn.banks for s in bank)
+    assert placed == list(range(n_slots))
+
+
+def test_map_slots_tied_loads_deterministic():
+    """All-equal loads: the sort is stable and the argmin breaks ties on
+    the lowest bank index, so placement is index-round-robin and
+    identical on every call."""
+    from repro.sched import map_slots
+
+    loads = [5.0] * 6
+    a = map_slots(loads, 3)
+    _assert_partition(a, 6)
+    assert a.banks == ((0, 3), (1, 4), (2, 5))
+    assert a.loads == (10.0, 10.0, 10.0)
+    assert a.imbalance == 1.0
+    for _ in range(3):
+        b = map_slots(loads, 3)
+        assert b.banks == a.banks and b.loads == a.loads
+
+
+def test_map_slots_zero_loads():
+    """Zero-load slots (e.g. freshly admitted, ctx 0) still partition
+    exactly once and score as perfectly balanced, not a div-by-zero."""
+    from repro.sched import map_slots
+
+    a = map_slots([0.0, 0.0, 0.0, 0.0], 2)
+    _assert_partition(a, 4)
+    assert a.loads == (0.0, 0.0)
+    assert a.imbalance == 1.0  # load_imbalance's zero-mean convention
+
+
+def test_map_slots_more_banks_than_slots():
+    """n_banks > len(slot_loads): every slot gets its own bank, the
+    surplus banks stay empty at zero load, and total load is conserved."""
+    from repro.sched import map_slots
+
+    loads = [7.0, 3.0]
+    a = map_slots(loads, 5)
+    _assert_partition(a, 2)
+    assert sum(len(b) for b in a.banks) == 2
+    assert max(len(b) for b in a.banks) == 1
+    empty = [l for b, l in zip(a.banks, a.loads) if not b]
+    assert empty == [0.0, 0.0, 0.0]
+    assert sum(a.loads) == pytest.approx(sum(loads))
+
+
+def test_map_slots_empty_and_single():
+    from repro.sched import map_slots
+
+    none = map_slots([], 3)
+    assert none.banks == ((), (), ())
+    assert none.imbalance == 1.0
+    one = map_slots([9.0], 3)
+    _assert_partition(one, 1)
+    assert one.banks[0] == (0,) and one.loads[0] == 9.0
+
+
+@settings(deadline=None, max_examples=60)
+@given(n_slots=st.integers(0, 24), n_banks=st.integers(1, 8),
+       seed=st.integers(0, 1 << 16))
+def test_map_slots_partition_and_determinism(n_slots, n_banks, seed):
+    import random
+
+    from repro.sched import map_slots
+
+    loads = [random.Random(seed + i).uniform(0.0, 1e6)
+             for i in range(n_slots)]
+    a = map_slots(loads, n_banks)
+    b = map_slots(list(loads), n_banks)
+    _assert_partition(a, len(loads))
+    assert a.banks == b.banks and a.loads == b.loads  # pure + deterministic
+    assert sum(a.loads) == pytest.approx(sum(loads), abs=1e-6)
+    # LPT never loads a bank beyond (max slot + mean) — the classic bound
+    if loads:
+        mean = sum(loads) / n_banks
+        assert max(a.loads) <= mean + max(loads) + 1e-6
