@@ -57,6 +57,14 @@ imbalance at the rebalance checks (``load_imbalance_pre`` vs
 ``load_imbalance_post`` — the bench_bands.json imbalance gate), with
 the migration NoC traffic priced by hbsim.rebalance_overhead.
 
+``--decode-window w`` adds the fused decode-window row trio (PR 10) on
+a widened share window: a lockstep baseline for that config, a per-step
+engine row, and the ``Engine(decode_window=w)`` row whose reuse steps
+between selection boundaries run as ONE dispatched scan — with a
+``tokens_match_unfused`` exact check against the per-step row, the
+dispatch counters (``dispatches``, ``steps_per_dispatch``), and the
+fused >= per-step tokens/s ratio gated in bench_bands.json.
+
 ``--attn-impl pallas`` adds the ref-vs-pallas comparison row: the same
 workload is served a second time with the Pallas attention kernels
 (partial attention + fused combine under coplace_shmap; interpret mode
@@ -129,14 +137,14 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
                reps=1, layout="default", admission="fifo", attn_impl="ref",
                prefill_chunk=None, hot_pages=None, spec_tokens=None,
                draft="ngram", sampling=None, rebalance="off",
-               warm_requests=None):
+               warm_requests=None, decode_window=None):
     from repro.serving import Engine, Request
 
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=buckets, layout=layout, admission=admission,
                  impl=attn_impl, prefill_chunk=prefill_chunk,
                  hot_pages=hot_pages, spec_tokens=spec_tokens, draft=draft,
-                 rebalance=rebalance)
+                 rebalance=rebalance, decode_window=decode_window)
     # sampling=(temperature, top_p) stamps every measured request; the
     # per-request RNG key is owned by (seed, uid), so the same request
     # list produces the same stochastic trace on ANY engine configuration
@@ -180,10 +188,23 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
            "wall_s": dt, "tokens_per_s": useful / dt,
            "steps_per_s": s.decode_steps / dt,
            "tokens_per_step": useful / max(s.decode_steps, 1),
+           # dispatch accounting (PR 10): decode_steps stops doubling as
+           # the dispatch count once windows fuse — report the logical
+           # step rate and the directly-observable dispatch reduction
+           "engine_steps": s.engine_steps,
+           "engine_steps_per_s": s.engine_steps / dt,
+           "dispatches": s.dispatches,
+           "steps_per_dispatch": s.decode_steps / max(s.dispatches, 1),
            "occupancy": s.occupancy, "recompiled_after_warmup": recompiled,
            "jit_cache": sizes,
            "tokens": {uid: list(c.tokens)
                       for uid, c in completions.items()}}
+    if decode_window:
+        out.update({
+            "decode_window": decode_window,
+            "fused_windows": s.fused_windows,
+            "fused_steps": s.fused_steps,
+        })
     if sampling:
         out["sampling"] = {"temperature": temp, "top_p": topp}
     if spec_tokens:
@@ -202,6 +223,14 @@ def run_engine(cfg, params, requests, *, max_batch, capacity, buckets,
             "tier_spills": s.tier_spills, "tier_fills": s.tier_fills,
             "tier_prefetch": s.tier_prefetch,
             "tier_hit_rate": s.tier_hit_rate,
+            # batched-transfer accounting (PR 10): one batched fill +
+            # one batched spill per refresh plan
+            "tier_fill_batches": s.tier_fill_batches,
+            "tier_spill_batches": s.tier_spill_batches,
+            "tier_gather_batches": s.tier_gather_batches,
+            "tier_batch_pages_max": s.tier_batch_pages_max,
+            "tier_fill_batch_mean": s.tier_fill_batch_mean,
+            "tier_spill_batch_mean": s.tier_spill_batch_mean,
         })
     if rebalance != "off":
         out.update({
@@ -356,7 +385,11 @@ def _row(mode, layout, impl, r, *, lock=None, extra=None):
     # emits up to k tokens per slot, so spec rows report both
     for key in ("steps_per_s", "sampling", "spec_tokens", "draft",
                 "spec_steps", "spec_drafted", "spec_accepted",
-                "mean_accepted_len"):
+                "mean_accepted_len",
+                # dispatch accounting + fused decode windows (PR 10)
+                "engine_steps", "engine_steps_per_s", "dispatches",
+                "steps_per_dispatch", "decode_window", "fused_windows",
+                "fused_steps"):
         if key in r:
             row[key] = r[key]
     if lock is not None:
@@ -370,7 +403,8 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
         gen_max=40, seed=0, reps=3, layout="default", layouts=None,
         attn_impl=None, json_path=None, prefill_chunk=None,
         arrival="batch", arrival_rate=0.5, tiered_hot_pages=None,
-        spec_tokens=None, sampling=None, rebalance=False):
+        spec_tokens=None, sampling=None, rebalance=False,
+        decode_window=None):
     """Lockstep vs ragged at equal token budget, per layout (x impl).
 
     ``layouts`` is an iterable of core/layouts registry names (default:
@@ -406,6 +440,15 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
     plan — the strict-reduction gate in bench_bands.json). Both engines
     warm up on a replay of the same workload so the migrate jit
     compiles before the measured phase.
+
+    ``decode_window=w`` adds the fused decode-window row trio on a
+    widened share window (reduced() uses share_window=2, leaving one
+    reuse step per window — too narrow for fusion to matter): its OWN
+    lockstep baseline on the widened config, a per-step engine row
+    (``decode_window=None``) and the fused row
+    (``Engine(decode_window=w)``) — with a ``tokens_match_unfused``
+    exact check, the dispatch counters, and ``speedup_vs_perstep`` (the
+    fused >= per-step tokens/s ratio gate in bench_bands.json).
     """
     from repro.configs import get_arch, reduced
     from repro.core import layouts as layoutlib
@@ -688,6 +731,72 @@ def run(csv: bool = True, *, requests=24, max_batch=4, gen_min=2,
                   f"{base_n['tokens_per_s']:.2f},speedup,{ratio:.2f},"
                   f"tokens_match_nonspec,{match}")
 
+    if decode_window:
+        # fused decode-window row trio (PR 10): the windows only pay
+        # when a share window holds several reuse steps, so this pair
+        # runs on a widened share window (reduced() uses 2 — a single
+        # reuse step per window) with generation lengths spanning
+        # several windows. The per-step row is BOTH the token-exactness
+        # reference and the tokens/s denominator; the widened config
+        # gets its own lockstep baseline so speedup_vs_lockstep stays
+        # honest.
+        import dataclasses
+
+        f_w = 8
+        f_cfg = dataclasses.replace(
+            cfg, h2eal=dataclasses.replace(cfg.h2eal, share_window=f_w))
+        # decode-heavy shape: short prompts (smallest bucket only) and
+        # generations spanning 3-6 windows, so the dispatch savings the
+        # fusion buys are measured against decode wall, not prefill
+        f_buckets = [min(buckets)]
+        f_gen_min, f_gen_max = 3 * f_w, 6 * f_w
+        f_cap = max(f_buckets) + f_gen_max + cfg.h2eal.page_size
+        f_reqs = build_requests(cfg, n=12, buckets=f_buckets,
+                                gen_min=f_gen_min, gen_max=f_gen_max,
+                                seed=seed)
+        f_lockstep = make_lockstep_runner(f_cfg, params, capacity=f_cap)
+        f_lockstep(f_reqs[:max_batch], max_batch=max_batch,
+                   pad_to=max(f_buckets))
+        f_lock = min((f_lockstep(f_reqs, max_batch=max_batch,
+                                 pad_to=max(f_buckets))
+                      for _ in range(max(reps, 1))),
+                     key=lambda r: r["wall_s"])
+        f_lock["tokens_per_step"] = (f_lock["useful_tokens"]
+                                     / max(f_lock["decode_steps"], 1))
+        # best-of-3 wall clocks: the ratio gate in bench_bands.json is
+        # exact (not banded), and fused-vs-per-step differ by ~100 ms
+        # on the toy config — single-rep scheduler noise could flip it
+        f_reps = max(reps, 3)
+        base_f = run_engine(f_cfg, params, f_reqs, max_batch=max_batch,
+                            capacity=f_cap, buckets=f_buckets, reps=f_reps)
+        fus = run_engine(f_cfg, params, f_reqs, max_batch=max_batch,
+                         capacity=f_cap, buckets=f_buckets, reps=f_reps,
+                         decode_window=decode_window)
+        match = fus["tokens"] == base_f["tokens"]
+        ratio = fus["tokens_per_s"] / base_f["tokens_per_s"]
+        rows.append(_row("ragged", "default", "ref", base_f, lock=f_lock,
+                         extra={"workload": "fusedwin",
+                                "share_window": f_w}))
+        rows.append(_row("ragged", "default", "ref", fus, lock=f_lock,
+                         extra={"workload": "fusedwin",
+                                "share_window": f_w,
+                                "tokens_match_unfused": match,
+                                "speedup_vs_perstep": ratio}))
+        out["fused"] = {"perstep": base_f, "fused": fus,
+                        "tokens_match_unfused": match,
+                        "speedup_vs_perstep": ratio}
+        if csv:
+            print(f"serve_throughput,fused_window,{decode_window},"
+                  f"share_window,{f_w},tok_s,{fus['tokens_per_s']:.2f},"
+                  f"perstep_tok_s,{base_f['tokens_per_s']:.2f},"
+                  f"speedup_vs_perstep,{ratio:.2f},dispatches,"
+                  f"{fus['dispatches']},perstep_dispatches,"
+                  f"{base_f['dispatches']},steps_per_dispatch,"
+                  f"{fus['steps_per_dispatch']:.2f},fused_windows,"
+                  f"{fus['fused_windows']},tokens_match_unfused,{match},"
+                  f"recompiled_after_warmup,"
+                  f"{fus['recompiled_after_warmup']}")
+
     if rebalance:
         # rebalancing row pair: the churn workload mixes short/long
         # prompts with short/long budgets at seed-determined positions,
@@ -823,6 +932,13 @@ if __name__ == "__main__":
                          "'retire' — tokens_match_norebalance exact "
                          "check, migration counters, and the "
                          "load_imbalance_pre/post strict-reduction gate")
+    ap.add_argument("--decode-window", type=int, default=0,
+                    help="add the fused decode-window row trio on a "
+                         "widened share window: own lockstep baseline, "
+                         "per-step engine row, and Engine(decode_window"
+                         "=w) — tokens_match_unfused exact check, "
+                         "dispatch counters, speedup_vs_perstep ratio "
+                         "gate; 0 = off")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable row list (tok/s per "
                          "layout x impl x admission mode, occupancy, "
@@ -841,4 +957,4 @@ if __name__ == "__main__":
         arrival=a.arrival, arrival_rate=a.arrival_rate,
         tiered_hot_pages=a.tiered_hot_pages or None,
         spec_tokens=a.spec_tokens or None, sampling=samp,
-        rebalance=a.rebalance)
+        rebalance=a.rebalance, decode_window=a.decode_window or None)

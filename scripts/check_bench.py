@@ -23,7 +23,15 @@ configuration: (mode, layout, impl, prefill_chunk, admission_mode,
 tier) — tier is "-" for untiered rows, "resident"/"tiered" for the
 hot/cold residency pair (tokens_match_resident joins the exact flags
 there, and a ratio gate holds the tiered row's throughput against the
-all-resident oracle).
+all-resident oracle). Fused decode-window rows (PR 10,
+``Engine(decode_window=w)``) append a ``win{w}`` key component —
+only when decode_window > 1, so existing keys are stable — and carry
+three extra gates: ``tokens_match_unfused`` joins the exact flags, a
+ratio gate holds fused tokens/s against the per-step row on the same
+widened-share-window config, and a dispatch gate bounds the fused
+row's dispatch count to ``per_window * ceil(decode_steps / w) +
+const`` (the constant absorbs admission, select-boundary, and sampling
+dispatches) so the row can't silently fall back to per-step dispatch.
 
 Regenerate the reference values after an intentional perf change with
 
@@ -43,6 +51,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -53,7 +62,7 @@ BANDS = os.path.join(REPO, "benchmarks", "bench_bands.json")
 BANDED = ("tokens_per_s", "ttft_p50_s", "ttft_p99_s")
 EXACT_TRUE = ("tokens_match_packed", "tokens_match_ref",
               "tokens_match_resident", "tokens_match_nonspec",
-              "tokens_match_norebalance")
+              "tokens_match_norebalance", "tokens_match_unfused")
 
 # fields every bench row MUST carry for keying — a rename in
 # benchmarks/serve_throughput.py._row() otherwise surfaced as a raw
@@ -94,13 +103,20 @@ def row_key(row):
     samp = row.get("sampling")
     samp_key = (f"t{samp['temperature']},p{samp['top_p']}" if samp
                 else "greedy")
-    return "|".join([row["mode"], row["layout"], row["impl"],
-                     f"chunk{row.get('prefill_chunk', 0)}",
-                     row.get("admission_mode", "-"),
-                     row.get("tier", "-"),
-                     samp_key,
-                     f"spec{row.get('spec_tokens', 0)}",
-                     f"wl:{row.get('workload', 'default')}"])
+    key = "|".join([row["mode"], row["layout"], row["impl"],
+                    f"chunk{row.get('prefill_chunk', 0)}",
+                    row.get("admission_mode", "-"),
+                    row.get("tier", "-"),
+                    samp_key,
+                    f"spec{row.get('spec_tokens', 0)}",
+                    f"wl:{row.get('workload', 'default')}"])
+    # fused decode-window rows (PR 10) select their own compiled
+    # configuration (the fused scan jit); per-step rows (window 1 or
+    # absent) keep the legacy key so existing bands stay stable
+    dw = row.get("decode_window", 0) or 0
+    if dw > 1:
+        key += f"|win{dw}"
+    return key
 
 
 def check(bench_path=BENCH, bands_path=BANDS):
@@ -161,6 +177,38 @@ def check(bench_path=BENCH, bands_path=BANDS):
             errors.append(
                 f"{gkey}: tokens_per_s is {ratio:.3f}x of "
                 f"{gvs} (gate: >= {gmin}x) — "
+                f"{gate.get('why', '')}")
+
+    # fused dispatch gate: the decode_window row must actually be
+    # dispatching windows — dispatch count bounded by per_window jit
+    # calls per fused window plus a constant absorbing the per-request
+    # admission (prefill + pack + first-token), select-boundary, and
+    # sampling dispatches. A regression to per-step dispatch blows
+    # straight through the bound.
+    for gate in bands.get("dispatch_gates", []):
+        where = f"{bands_path} dispatch_gates entry"
+        gkey = _require(gate, "row", where)
+        per_window = _require(gate, "per_window", where)
+        const = _require(gate, "const", where)
+        row = rows.get(gkey)
+        if row is None:
+            errors.append(f"dispatch gate {gkey}: row missing from "
+                          f"{bench_path}")
+            continue
+        missing = [f for f in ("dispatches", "decode_steps",
+                               "decode_window") if f not in row]
+        if missing:
+            errors.append(f"dispatch gate {gkey}: row lacks {missing} "
+                          "(the --decode-window benchmark emits all)")
+            continue
+        windows = math.ceil(row["decode_steps"]
+                            / max(row["decode_window"], 1))
+        allowed = per_window * windows + const
+        if row["dispatches"] > allowed:
+            errors.append(
+                f"{gkey}: dispatches={row['dispatches']} > {allowed} "
+                f"(= {per_window} x ceil({row['decode_steps']}/"
+                f"{row['decode_window']}) + {const}) — "
                 f"{gate.get('why', '')}")
 
     # rebalance gate: a row serving the churn workload with
@@ -236,8 +284,8 @@ def validate_trend_row(entry, where):
 
 def append_trend(trend_path, bench_path=BENCH):
     """Append one JSONL trend row for the current commit: every bench
-    row's tokens_per_s plus the tiered-residency, speculative, and
-    rebalance counters. Re-running on the same commit replaces that
+    row's tokens_per_s plus the tiered-residency, speculative,
+    fused-window dispatch, and rebalance counters. Re-running on the same commit replaces that
     commit's row, so each PR contributes exactly one line to the
     trajectory file. Every row — existing and new — is validated
     against TREND_SCHEMA."""
@@ -271,6 +319,13 @@ def append_trend(trend_path, bench_path=BENCH):
         entry["spec"] = {k: spec[k] for k in (
             "spec_tokens", "draft", "mean_accepted_len", "steps_per_s",
             "speedup_vs_nonspec", "tokens_match_nonspec") if k in spec}
+    fused = next((r for r in bench["rows"]
+                  if (r.get("decode_window") or 0) > 1), None)
+    if fused is not None:
+        entry["fused"] = {k: fused[k] for k in (
+            "decode_window", "fused_windows", "fused_steps",
+            "dispatches", "steps_per_dispatch",
+            "tokens_match_unfused", "speedup_vs_perstep") if k in fused}
     rb = next((r for r in bench["rows"]
                if r.get("rebalance") not in (None, "off")), None)
     if rb is not None:

@@ -30,16 +30,20 @@ if [[ "${FAST:-0}" != "1" ]]; then
   # the sampling + speculative-decode rows: stochastic non-spec,
   # greedy + sampled spec (tokens_match_nonspec exact via the coupled
   # rejection sampler), the ngram-friendly workload pair carrying
-  # the spec >= non-spec tokens/s ratio gate, and the churn-workload
+  # the spec >= non-spec tokens/s ratio gate, the churn-workload
   # rebalance pair: off vs retire-triggered live slot migration,
-  # token-exact with a strict imbalance-reduction gate)
+  # token-exact with a strict imbalance-reduction gate, and the fused
+  # decode-window trio on a widened share window: lockstep baseline,
+  # per-step engine row, and the Engine(decode_window=8) row whose
+  # reuse steps run as ONE dispatched scan — tokens_match_unfused
+  # exact, fused >= per-step tokens/s ratio gate, dispatch-count gate)
   # -> BENCH_serve.json, held against the committed bands
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python \
       benchmarks/serve_throughput.py --requests 6 --max-batch 2 \
       --gen-max 8 --reps 1 --layout default,interleave \
       --prefill-chunk 8 --arrival poisson --attn-impl pallas \
       --tiered-hot-pages 9 --spec-tokens 4 --sampling 0.8,0.9 \
-      --rebalance --json BENCH_serve.json
+      --rebalance --decode-window 8 --json BENCH_serve.json
   # perf gate: tokens/s and TTFT within the committed bands
   # (benchmarks/bench_bands.json), recompile flags and chunked/pallas/
   # tiered/speculative/rebalance token-match flags exact, chunked-vs-
@@ -64,6 +68,25 @@ if [[ "${FAST:-0}" != "1" ]]; then
           --prefill-chunk "$CHUNK"
     done
   done
+  # fused decode-window smoke (docs/serving.md §Fused decode windows):
+  # up to 8 reuse steps between selection boundaries run as ONE
+  # dispatched scan with in-scan sampling and device-side retirement.
+  # Default layout packed, then the 8-fake-device shard_map
+  # co-placement entry with chunked prefill riding the mixed fused jit
+  # through the layout decode_window hook — the widened --share-window
+  # gives the window room to fuse (the reduced config pins it to 2)
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
+      repro.launch.serve --arch smollm-360m --reduced \
+      --workload ragged --requests 6 --max-batch 2 \
+      --prompt-buckets 16,24 --gen-min 8 --gen-max 20 \
+      --share-window 8 --decode-window 8
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m \
+      repro.launch.serve --arch smollm-360m --reduced \
+      --workload ragged --requests 4 --max-batch 2 \
+      --prompt-buckets 16,24 --gen-min 8 --gen-max 20 \
+      --layout coplace_shmap --admission balanced --prefill-chunk 8 \
+      --share-window 8 --decode-window 8
   # chunked prefill through the Pallas chunk kernels (interpret mode on
   # CPU: a correctness row, not a perf row — docs/kernels.md)
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \

@@ -617,6 +617,82 @@ def fill_kv_page_rows(state, slot, pages, rows):
         lambda ps, ext, idx: ext.at[idx].set(rows[ps].astype(ext.dtype)))
 
 
+# -- batched (slot, page)-pair variants (PR 10) -----------------------------
+#
+# One refresh plan touches many slots; the per-slot ops above would cost
+# one dispatch per slot per direction. These variants take fixed-length
+# -1-padded (M,) slot/page index vectors — M is the engine's static pair
+# capacity (n_slots x n_pages), so ONE compiled program applies any
+# refresh plan as one batched gather plus one batched scatter per
+# direction. Same overflow-row trick, lifted to the flattened
+# (batch x page) row space; (slot, page) pairs are unique by
+# construction, so the scatters never collide.
+
+
+def _pair_flat(leaf, ps: str):
+    """Leaf -> ((B*C, ...) pair-row view, the (B, C, ...) shape, ax)."""
+    ax = _leaf_batch_axis(ps)
+    m = jnp.moveaxis(leaf, ax, 0)          # batch to front
+    m = jnp.moveaxis(m, ax + 2, 1)         # page axis rides at ax+2
+    return m.reshape((-1,) + m.shape[2:]), m.shape, ax
+
+
+def _pair_idx(slots, pages, c: int, n: int):
+    """Flattened pair-row indices; padded (-1) pairs -> overflow row n."""
+    fi = slots.astype(jnp.int32) * c + pages.astype(jnp.int32)
+    return jnp.where((slots >= 0) & (pages >= 0), fi, n)
+
+
+def gather_kv_rows_pairs(state, slots, pages):
+    """Batched ``gather_kv_page_rows``: read M (slot, page) page rows out
+    of the batched serve state in one program. Returns
+    ``{path: (M, ...)}``; padded pairs return zeros."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        ps = jax.tree_util.keystr(path)
+        if not _is_kv_page_leaf(ps):
+            continue
+        flat, mshape, _ = _pair_flat(leaf, ps)
+        n, c = flat.shape[0], mshape[1]
+        ext = jnp.concatenate(
+            [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)], axis=0)
+        out[ps] = ext[_pair_idx(slots, pages, c, n)]
+    return out
+
+
+def _update_kv_rows_pairs(state, slots, pages, value_fn):
+    def upd(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if not _is_kv_page_leaf(ps):
+            return leaf
+        flat, mshape, ax = _pair_flat(leaf, ps)
+        n, c = flat.shape[0], mshape[1]
+        ext = jnp.concatenate(
+            [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)], axis=0)
+        ext = value_fn(ps, ext, _pair_idx(slots, pages, c, n))
+        m2 = ext[:n].reshape(mshape)
+        m2 = jnp.moveaxis(m2, 1, ax + 2)
+        return jnp.moveaxis(m2, 0, ax).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(upd, state)
+
+
+def spill_kv_rows_pairs(state, slots, pages):
+    """Batched ``spill_kv_page_rows``: zero M (slot, page) page rows in
+    one program (zero is the empty-page sentinel)."""
+    return _update_kv_rows_pairs(
+        state, slots, pages, lambda ps, ext, idx: ext.at[idx].set(0))
+
+
+def fill_kv_rows_pairs(state, slots, pages, rows):
+    """Batched ``fill_kv_page_rows``: restore ``{path: (M, ...)}``
+    far-store rows into M (slot, page) page rows in one program. Exact
+    inverse of the batched spill."""
+    return _update_kv_rows_pairs(
+        state, slots, pages,
+        lambda ps, ext, idx: ext.at[idx].set(rows[ps].astype(ext.dtype)))
+
+
 class TieredPagedCache:
     """Host-side residency controller for the two-tier paged KV cache.
 
@@ -708,6 +784,17 @@ class TieredPagedCache:
                 continue
             self.far[(slot, p)] = {ps: np.asarray(buf[p]).copy()
                                    for ps, buf in rows.items()}
+
+    def store_pair_rows(self, slots, pages, rows: dict, count: int):
+        """Archive a batched pair gather (``{path: (M, ...)}`` aligned
+        with the (slot, page) index vectors; first ``count`` entries
+        real). Same idempotence rule as ``store_rows``."""
+        for i in range(count):
+            key = (int(slots[i]), int(pages[i]))
+            if key in self.far:
+                continue
+            self.far[key] = {ps: np.asarray(buf[i]).copy()
+                             for ps, buf in rows.items()}
 
     # -- policy --------------------------------------------------------
     def spill_candidates(self, slot: int, ctx: int, selected) -> list:

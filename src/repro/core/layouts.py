@@ -283,6 +283,21 @@ class AttentionLayout:
             f"layout {self.name!r} does not support ragged "
             f"(continuous-batching) decode")
 
+    # -- fused decode windows (PR 10) --------------------------------------
+    def decode_window(self, body, carry, xs, *, length: int):
+        """Run ``length`` reuse decode steps as one fused program.
+
+        ``body`` is a ``lax.scan``-shaped step built by
+        runtime/serve.make_fused_window_step: its per-iteration decode
+        math routes through this layout's own ``ragged_decode`` /
+        ``prefill_chunk`` hooks, so the default scan realization is
+        correct for every registry entry — including shard_map bodies
+        (``coplace_shmap``), which scan like any other traced callee. A
+        layout only overrides this to change HOW the window iterates
+        (e.g. an unrolled or pipelined realization), never the step
+        math."""
+        return jax.lax.scan(body, carry, xs, length=length)
+
     # -- speculative verify (PR 8) ---------------------------------------
     def verify_chunk(self, spec, state: Dict, inputs: "VerifyInputs", *,
                      perm=None):
@@ -358,6 +373,12 @@ def dispatch_decode(layout, spec, state: Dict, inputs: DecodeInputs, *,
     lay = get_layout(layout)
     fn = lay.ragged_decode if inputs.is_ragged else lay.decode
     return fn(spec, state, inputs, do_select=do_select, perm=perm)
+
+
+def dispatch_decode_window(layout, body, carry, xs, *, length: int):
+    """Route a fused decode window (a scan over reuse-step bodies built
+    from ``dispatch_decode``) to ``layout``'s decode_window hook."""
+    return get_layout(layout).decode_window(body, carry, xs, length=length)
 
 
 def dispatch_prefill_chunk(layout, spec, state: Dict,

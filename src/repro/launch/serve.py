@@ -37,6 +37,10 @@ The impl is fixed at engine construction, never switched per step.
 placement when retirements skew the per-bank compute and moves cache
 rows between slot indices without recompiling or changing any token
 (docs/serving.md §Rebalancing).
+``--decode-window w`` fuses up to ``w`` reuse steps between selection
+boundaries into ONE dispatched lax.scan with in-scan sampling and
+device-side retirement (docs/serving.md §Fused decode windows); token
+traces stay bit-exact vs per-step dispatch.
 
 CPU demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
@@ -133,7 +137,7 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
                prompt_buckets, report_balance: bool = False,
                layout="default", admission: str = "fifo",
                attn_impl: str = "ref", prefill_chunk=None,
-               rebalance: str = "off"):
+               rebalance: str = "off", decode_window=None):
     """Serve ``requests`` with the continuous-batching engine.
 
     ``layout`` is any core/layouts registry entry (e.g. "coplace_shmap"
@@ -148,7 +152,10 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
     live slot-migration planner (sched/rebalance.py): "retire" re-plans
     when a retirement frees a slot, "interval" every
     ``rebalance_interval`` steps — token traces are bit-exact either way
-    (docs/serving.md §Rebalancing). Returns (completions, stats dict)."""
+    (docs/serving.md §Rebalancing). ``decode_window=w`` fuses up to w
+    reuse steps per dispatch with device-side retirement
+    (docs/serving.md §Fused decode windows).
+    Returns (completions, stats dict)."""
     from repro.core import layouts as layoutlib
     from repro.serving import Engine
 
@@ -161,7 +168,8 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
     eng = Engine(cfg, params, max_batch=max_batch, capacity=capacity,
                  prompt_buckets=prompt_buckets, layout=layout,
                  admission=admission, impl=attn_impl,
-                 prefill_chunk=prefill_chunk, rebalance=rebalance)
+                 prefill_chunk=prefill_chunk, rebalance=rebalance,
+                 decode_window=decode_window)
     completions = eng.run(requests)
     s = eng.stats
     stats = {
@@ -176,8 +184,16 @@ def run_ragged(cfg, params, requests, *, max_batch: int, capacity: int,
         "occupancy": s.occupancy,
         "tokens_out": s.tokens_out,
         "admission_reorders": s.admission_reorders,
+        "dispatches": s.dispatches,
+        "steps_per_dispatch": s.steps_per_dispatch,
         "jit_cache": eng.jit_cache_sizes(),
     }
+    if decode_window:
+        stats["fused"] = {
+            "decode_window": decode_window,
+            "fused_windows": s.fused_windows,
+            "fused_steps": s.fused_steps,
+        }
     if rebalance != "off":
         stats["rebalance"] = {
             "trigger": rebalance,
@@ -287,6 +303,16 @@ def main(argv=None):
                          "retire = re-plan when a retirement frees a slot, "
                          "interval = every 16 engine steps. Token traces "
                          "stay bit-exact (docs/serving.md §Rebalancing)")
+    ap.add_argument("--decode-window", type=int, default=0,
+                    help="fuse up to N reuse steps between selection "
+                         "boundaries into one dispatched scan with "
+                         "device-side retirement (0 = per-step dispatch; "
+                         "docs/serving.md §Fused decode windows)")
+    ap.add_argument("--share-window", type=int, default=0,
+                    help="override cfg.h2eal.share_window (selection "
+                         "cadence). The reduced configs pin it to 2, "
+                         "leaving a single reuse step per window; widen "
+                         "it to give --decode-window room to fuse")
     ap.add_argument("--attn-impl", choices=["ref", "pallas"], default="ref",
                     help="attention kernel impl (kernels/ops.py): ref = "
                          "pure-jnp oracle, pallas = Pallas kernels "
@@ -297,6 +323,11 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.share_window:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, h2eal=dataclasses.replace(cfg.h2eal,
+                                           share_window=args.share_window))
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
 
@@ -313,7 +344,8 @@ def main(argv=None):
             layout=args.layout, admission=args.admission,
             attn_impl=args.attn_impl,
             prefill_chunk=args.prefill_chunk or None,
-            rebalance=args.rebalance)
+            rebalance=args.rebalance,
+            decode_window=args.decode_window or None)
         print(f"[serve] arch={cfg.name} workload=ragged "
               f"layout={args.layout} admission={args.admission} "
               f"attn_impl={args.attn_impl} rebalance={args.rebalance} "
@@ -326,6 +358,13 @@ def main(argv=None):
               f"{stats['admissions']}/{stats['prefill_chunks']}; "
               f"admission reorders: {stats['admission_reorders']}; "
               f"jit compiles: {stats['jit_cache']}")
+        if "fused" in stats:
+            fu = stats["fused"]
+            print(f"[serve] fused decode windows: w={fu['decode_window']} "
+                  f"windows={fu['fused_windows']} "
+                  f"fused_steps={fu['fused_steps']} "
+                  f"dispatches={stats['dispatches']} "
+                  f"steps/dispatch={stats['steps_per_dispatch']:.2f}")
         if "rebalance" in stats:
             r = stats["rebalance"]
             print(f"[serve] rebalance trigger={r['trigger']} "

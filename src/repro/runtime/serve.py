@@ -170,6 +170,105 @@ def make_prefill_chunk_step(cfg: ArchConfig, scfg: ServeConfig, *,
     return chunk_step
 
 
+def make_fused_window_step(cfg: ArchConfig, scfg: ServeConfig, *,
+                           window: int, chunk: int | None = None):
+    """Fused decode window: ``window`` reuse steps as ONE program (PR 10).
+
+    A ``lax.scan`` over the reuse-step body with sampling folded in-scan
+    and device-side retirement: slot i emits exactly ``budgets[i]``
+    tokens (sched/windows.window_budgets — the host-encoded stop
+    conditions), then its lane of the carried ``active`` mask flips and
+    the remaining iterations leave its rows untouched, bit-identically
+    to the per-step loop going inactive. The scan realization routes
+    through the layout registry (core/layouts.py ``decode_window``), so
+    every entry — including the shard_map ``coplace_shmap`` body —
+    inherits fusion without layout-specific engine code.
+
+    Decode-only variant (``chunk=None``)::
+
+        fused(params, state, tok, active, gen, budgets, base, temp, topp)
+          -> (trace (window, B) int32, state', tok', gen')
+
+    Mixed variant (``chunk=C``) additionally threads the engine's
+    host-presimulated chunked-prefill schedule through the scan — per
+    iteration a (B, C) token block + per-slot chunk lengths, applied
+    BEFORE the decode half exactly like the per-step mixed step, plus a
+    ``finish`` mask marking rows whose prompt completes that iteration
+    (their first token is sampled from the chunk logits with gen=0, the
+    same program lane as ``Engine._first_token``)::
+
+        fused(params, state, tok, active, gen, budgets, base, temp, topp,
+              chunk_tokens (window, B, C), chunk_lens (window, B),
+              finish (window, B)) -> (trace, state', tok', gen')
+
+    Rows of ``trace`` beyond a slot's budget hold its last token (the
+    where-carry), never fresh samples; the engine slices per-slot
+    prefixes on the host. Iterations past the useful length are full
+    no-ops (all-inactive masks), so one compiled entry serves every
+    boundary residue — the zero-recompile invariant.
+    """
+    from repro.core import layouts as layoutlib
+    from repro.serving import sampling
+
+    layout = _layout(scfg)
+
+    def _decode_half(params, state, tok, act, gen, emitted, budgets,
+                     base, temp, topp):
+        logits, state = M.decode_step(cfg, params, state, tok,
+                                      do_select=False, impl=scfg.impl,
+                                      layout=layout, active=act)
+        t = sampling.sample_tokens(logits, base, gen, temp, topp)
+        tok = jnp.where(act, t, tok)
+        gen = jnp.where(act, gen + 1, gen)
+        emitted = emitted + act.astype(jnp.int32)
+        act = act & (emitted < budgets)
+        return state, tok, act, gen, emitted
+
+    if chunk is None:
+        def fused(params, state, tok, active, gen, budgets, base, temp,
+                  topp):
+            def body(carry, _):
+                state, tok, act, gen, emitted = carry
+                state, tok, act, gen, emitted = _decode_half(
+                    params, state, tok, act, gen, emitted, budgets,
+                    base, temp, topp)
+                return (state, tok, act, gen, emitted), tok
+
+            carry0 = (state, tok, active, gen, jnp.zeros_like(budgets))
+            carry, trace = layoutlib.dispatch_decode_window(
+                layout, body, carry0, None, length=window)
+            state, tok, _, gen, _ = carry
+            return trace, state, tok, gen
+    else:
+        def fused(params, state, tok, active, gen, budgets, base, temp,
+                  topp, chunk_tokens, chunk_lens, finish):
+            assert chunk_tokens.shape[0] == window, chunk_tokens.shape
+            assert chunk_tokens.shape[2] == chunk, chunk_tokens.shape
+
+            def body(carry, xs):
+                state, tok, act, gen, emitted = carry
+                ctoks, clens, fin = xs
+                logits_c, state = M.prefill_chunk(
+                    cfg, params, state, ctoks, chunk_len=clens,
+                    active=clens > 0, impl=scfg.impl, layout=layout)
+                first = sampling.sample_tokens(
+                    logits_c, base, jnp.zeros_like(gen), temp, topp)
+                tok = jnp.where(fin, first, tok)
+                gen = jnp.where(fin, jnp.ones_like(gen), gen)
+                state, tok, act, gen, emitted = _decode_half(
+                    params, state, tok, act, gen, emitted, budgets,
+                    base, temp, topp)
+                return (state, tok, act, gen, emitted), tok
+
+            carry0 = (state, tok, active, gen, jnp.zeros_like(budgets))
+            carry, trace = layoutlib.dispatch_decode_window(
+                layout, body, carry0, (chunk_tokens, chunk_lens, finish),
+                length=window)
+            state, tok, _, gen, _ = carry
+            return trace, state, tok, gen
+    return fused
+
+
 def jit_serve_steps(cfg: ArchConfig, scfg: ServeConfig, mesh: Mesh, params,
                     state, batch_size: int):
     """Returns (prefill_fn, decode_select_fn, decode_reuse_fn) jitted with

@@ -166,6 +166,17 @@ def verify_step_out_shardings(mesh: Mesh, state_shardings):
     return (rep, rep, rep, rep, state_shardings)
 
 
+def fused_window_out_shardings(mesh: Mesh, state_shardings):
+    """(trace, state, tok, gen) out_shardings for the fused decode-window
+    jit (runtime/serve.make_fused_window_step): the (window, B) token
+    trace block and the per-slot token/gen vectors replicated, the serve
+    state pinned to its layout placement so the scanned reuse body keeps
+    the exact per-step placement — the fused half of the zero-recompile
+    invariant (docs/serving.md §Fused decode windows)."""
+    rep = replicated(mesh)
+    return (rep, state_shardings, rep, rep)
+
+
 def batch_sharding(mesh: Mesh, batch_size: int):
     """Sharding for (B, ...) input batches: B over (pod, data) if divisible."""
     ax = batch_axes(mesh)

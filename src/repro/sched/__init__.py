@@ -24,6 +24,9 @@ from repro.sched.rebalance import (  # noqa: F401
     RebalancePlan,
     plan_rebalance,
 )
+from repro.sched.windows import (  # noqa: F401
+    window_budgets,
+)
 from repro.sched.balance import (  # noqa: F401
     admission_score,
     balanced_loads,

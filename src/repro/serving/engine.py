@@ -131,19 +131,36 @@ class EngineStats:
     decode_steps: int = 0
     select_steps: int = 0
     reuse_steps: int = 0
-    engine_steps: int = 0        # step() calls that dispatched anything
+    engine_steps: int = 0        # logical steps (a fused window counts
+                                 # each of its in-scan steps)
     admissions: int = 0          # requests admitted into a slot
-    prefill_chunks: int = 0      # chunked-prefill dispatches (mixed steps)
+    prefill_chunks: int = 0      # chunked-prefill steps (mixed steps;
+                                 # in-scan chunk iterations count too)
     tokens_out: int = 0
     occupancy_sum: float = 0.0   # sum over steps of live-slot fraction
     wall_s: float = 0.0          # set by run()
     admission_reorders: int = 0  # balanced admission: non-FIFO picks
+    # dispatch accounting (PR 10): before fused windows, decode_steps
+    # doubled as the dispatch count; a fused window collapses up to w-1
+    # steps into ONE dispatch, so the two are split. ``dispatches``
+    # counts every jitted call the engine issues (decode, sample,
+    # prefill, pack/reset, chunk, tier ops, verify, migrate — draft-
+    # provider internals excluded).
+    dispatches: int = 0
+    fused_windows: int = 0       # fused decode-window dispatches
+    fused_steps: int = 0         # decode steps consumed inside them
     # tiered residency (Engine(hot_pages=N); all counts are PAGES):
     tier_hits: int = 0           # selected pages found device-resident
     tier_misses: int = 0         # selected pages cold — filled + replayed
     tier_spills: int = 0         # pages archived to the far store
     tier_fills: int = 0          # demand fills (miss repair)
     tier_prefetch: int = 0       # speculative fills one window ahead
+    # batched tier transfers (PR 10): one refresh plan = one batched
+    # fill + one batched spill dispatch across every (slot, page) pair
+    tier_fill_batches: int = 0   # batched fill dispatches
+    tier_spill_batches: int = 0  # batched spill dispatches
+    tier_gather_batches: int = 0  # batched first-spill archive gathers
+    tier_batch_pages_max: int = 0  # largest single batched transfer
     # speculative decode (Engine(spec_tokens=k)):
     spec_steps: int = 0          # verify dispatches (batched steps)
     spec_slot_steps: int = 0     # per-slot verify events (accept samples)
@@ -180,6 +197,35 @@ class EngineStats:
         emits up to k tokens per slot, so the two rates split — report
         BOTH (the PR-8 stats fix; benchmarks/serve_throughput.py)."""
         return self.decode_steps / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def engine_steps_per_s(self) -> float:
+        """Logical engine-step rate (the PR-10 stats fix: decode_steps
+        conflated steps with dispatches once windows fuse — this is the
+        step rate, ``steps_per_dispatch`` is the fusion factor)."""
+        return self.engine_steps / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def steps_per_dispatch(self) -> float:
+        """Decode steps per jitted dispatch — the directly-observable
+        dispatch reduction of fused decode windows (~1/2 per-step: each
+        decode step costs a decode + a sample dispatch; up to ~w-1 of a
+        share window rides one fused dispatch)."""
+        return (self.decode_steps / self.dispatches
+                if self.dispatches else 0.0)
+
+    @property
+    def tier_fill_batch_mean(self) -> float:
+        """Mean pages per batched tier fill (demand + prefetch)."""
+        return ((self.tier_fills + self.tier_prefetch)
+                / self.tier_fill_batches if self.tier_fill_batches
+                else 0.0)
+
+    @property
+    def tier_spill_batch_mean(self) -> float:
+        """Mean pages per batched tier spill."""
+        return (self.tier_spills / self.tier_spill_batches
+                if self.tier_spill_batches else 0.0)
 
     @property
     def mean_accepted_len(self) -> float:
@@ -404,6 +450,28 @@ class Engine:
                   view). Default: the layout's ``balance_shards`` when
                   sharded, else one bank per two slots (capped at 4) so
                   LPT can pair heavy slots with light ones within a bank.
+    decode_window : fused decode-window length w enabling ONE-dispatch
+                  execution of the reuse steps between two selection
+                  boundaries: a ``lax.scan`` over the reuse step body
+                  with sampling folded in-scan and device-side
+                  retirement via a sched-computed per-slot budget vector
+                  (sched/windows.py) — the host learns of retirements
+                  only at the window boundary, where READY admission and
+                  rebalance checks already live. Token traces are
+                  bit-identical to per-step dispatch (the scanned body
+                  IS the per-step program). None/1 = per-step dispatch
+                  (the default, unchanged). Composes with chunked
+                  prefill (the prefilling slots' chunk schedule is
+                  presimulated on the host and threaded through the
+                  scan) and with tiered residency (reuse steps only read
+                  pinned-resident pages, so a fused window can never
+                  cold-miss — the selection step stays per-step and
+                  handles miss-replay). INCOMPATIBLE with
+                  ``spec_tokens`` (verify steps advance phases by
+                  variable accepted counts; the per-step fallback must
+                  be requested explicitly by passing decode_window=None)
+                  — validated here, never a silent fallback. See
+                  docs/serving.md §Fused decode windows.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int,
@@ -420,7 +488,8 @@ class Engine:
                  rebalance_interval: int = 16,
                  rebalance_min_gain: float = 0.02,
                  rebalance_cooldown: int = 8,
-                 rebalance_banks: Optional[int] = None):
+                 rebalance_banks: Optional[int] = None,
+                 decode_window: Optional[int] = None):
         from repro.core import layouts as layoutlib
         from repro.kernels.ops import resolve_impl
 
@@ -494,6 +563,20 @@ class Engine:
                     f"spec_tokens={self.spec_tokens} must be in "
                     f"[1, h2eal.local={cfg.h2eal.local}]")
             self.draft = draftlib.resolve_draft(draft)
+        self.decode_window = 1 if decode_window is None else int(decode_window)
+        if self.decode_window < 1:
+            raise ValueError(
+                f"decode_window={decode_window} must be >= 1 "
+                "(1 == per-step dispatch)")
+        if self.decode_window > 1 and self.spec_tokens is not None:
+            # verify steps advance each slot's phase by a VARIABLE
+            # accepted count, so a fixed-budget in-scan window cannot
+            # encode the stop conditions. The per-step fallback must be
+            # chosen by the caller, never silently substituted.
+            raise ValueError(
+                "decode_window > 1 is incompatible with spec_tokens "
+                "(verify steps advance phases by variable accepted "
+                "counts); pass decode_window=None for per-step dispatch")
         if rebalance not in ("off", "retire", "interval"):
             raise ValueError(
                 f"rebalance={rebalance!r}: valid triggers are "
@@ -590,6 +673,34 @@ class Engine:
                                          gen[None], temp[None],
                                          topp[None])[0]
         self._sample_one = jax.jit(_sample_one_fn)
+        # fused decode windows (PR 10): the reuse steps between two
+        # selection boundaries collapse into ONE dispatched lax.scan
+        # (runtime/serve.make_fused_window_step, routed through the
+        # layout registry's decode_window hook). Built only when a
+        # window can hold a reuse step at all (share_window > 1); the
+        # selection step itself always stays per-step — it carries the
+        # tiered miss-replay and the host-visible refresh digest.
+        self._fused = None
+        self._fused_mix = None
+        self._fused_len = 0
+        if self.decode_window > 1 and self.share_window > 1:
+            self._fused_len = min(self.decode_window,
+                                  self.share_window - 1)
+            fw_shard = {}
+            if self.plan.shard_state:
+                fw_shard = {"out_shardings":
+                            shardlib.fused_window_out_shardings(
+                                self.mesh, ss)}
+            self._fused = jax.jit(
+                serve_rt.make_fused_window_step(
+                    cfg, scfg, window=self._fused_len),
+                donate_argnums=(1,), **fw_shard)
+            if self.prefill_chunk is not None:
+                self._fused_mix = jax.jit(
+                    serve_rt.make_fused_window_step(
+                        cfg, scfg, window=self._fused_len,
+                        chunk=self.prefill_chunk),
+                    donate_argnums=(1,), **fw_shard)
         self._migrate = None
         if self.rebalance != "off":
             # live slot migration (sched/rebalance.py): copy every
@@ -652,7 +763,18 @@ class Engine:
         self._tok = jnp.zeros((max_batch,), jnp.int32)   # next-token feed
         self._act_dev = jnp.zeros((max_batch,), bool)    # device active mask
         self._act_mirror = np.zeros((max_batch,), bool)  # host copy of it
-        self._trace: List[jax.Array] = []                # (B,) per step
+        # device-side token trace: a list of (k, B) row BLOCKS (one row
+        # per per-step decode, k rows per verify step, up to window rows
+        # per fused window); finalize() concatenates. _trace_rows is the
+        # running row count — Completion._step_idx indexes rows, so it
+        # must never be derived from len(_trace) or decode_steps.
+        self._trace: List[jax.Array] = []
+        self._trace_rows = 0
+        # engine_steps watermark from the previous step() — the interval
+        # rebalance trigger fires on CROSSING a multiple of the interval
+        # (identical to `% == 0` per-step; a fused window can jump past
+        # the multiple without ever landing on it)
+        self._prev_engine_steps = 0
         # engine-step index of each trace row: lets a latency harness map
         # token emissions (Completion._step_idx trace rows) to per-step
         # wall-clock timestamps (benchmarks/serve_throughput.py --arrival)
@@ -734,16 +856,21 @@ class Engine:
             sink=h2.sink, local=h2.local,
             stripe_shards=self.plan.page_stripe_shards)
 
+        # every batched transfer pads its (slot, page) pair vectors to
+        # ONE static capacity, so any refresh plan — one page or the
+        # whole cache — reuses a single compiled entry per op
+        self._tier_pair_cap = self.batch.max_batch * n_pages
+
         # per-instance wrappers: keep each engine's jit caches private
         # (the _pack_fn rationale above)
-        def _gather_fn(state, slot):
-            return cachelib.gather_kv_page_rows(state, slot)
+        def _gather_fn(state, slots, pages):
+            return cachelib.gather_kv_rows_pairs(state, slots, pages)
 
-        def _spill_fn(state, slot, pages):
-            return cachelib.spill_kv_page_rows(state, slot, pages)
+        def _spill_fn(state, slots, pages):
+            return cachelib.spill_kv_rows_pairs(state, slots, pages)
 
-        def _fill_fn(state, slot, pages, rows):
-            return cachelib.fill_kv_page_rows(state, slot, pages, rows)
+        def _fill_fn(state, slots, pages, rows):
+            return cachelib.fill_kv_rows_pairs(state, slots, pages, rows)
 
         self._tier_gather = jax.jit(_gather_fn)
         self._tier_spill = jax.jit(_spill_fn, donate_argnums=(0,),
@@ -785,47 +912,74 @@ class Engine:
             sel_by[slot], hot_by[slot] = sel, hot
         return sel_by, hot_by
 
-    def _tier_fill_pages(self, serve, slot: int, pages, *, prefetch: bool):
-        """Restore far-store rows for ``pages`` onto the device (demand
-        fill on a cold miss, or speculative prefetch one share window
-        ahead). Every filled page was spilled earlier, so its rows are
-        in the far store by construction."""
+    def _tier_pair_vectors(self, pairs):
+        """(slot, page) pairs padded (-1) to the static pair capacity —
+        one compiled entry per transfer op regardless of batch size."""
+        m = self._tier_pair_cap
+        assert len(pairs) <= m, (len(pairs), m)
+        slots = np.full((m,), -1, np.int32)
+        pages = np.full((m,), -1, np.int32)
+        for i, (s, p) in enumerate(pairs):
+            slots[i] = s
+            pages[i] = p
+        return jnp.asarray(slots), jnp.asarray(pages)
+
+    def _tier_fill_work(self, serve, work, *, prefetch: bool):
+        """Restore far-store rows onto the device for EVERY (slot, pages)
+        entry of ``work`` in ONE batched scatter (demand fill on a cold
+        miss, or speculative prefetch one share window ahead). Every
+        filled page was spilled earlier, so its rows are in the far
+        store by construction."""
         t = self._tier
-        pages = [int(p) for p in pages]
-        parr = np.full((t.n_pages,), -1, np.int32)
-        parr[:len(pages)] = pages
-        template = t.far[(slot, pages[0])]
-        rows = {ps: np.zeros((t.n_pages,) + r.shape, r.dtype)
+        pairs = [(int(s), int(p)) for s, pg in work for p in pg]
+        slots, pages = self._tier_pair_vectors(pairs)
+        template = t.far[pairs[0]]
+        rows = {ps: np.zeros((self._tier_pair_cap,) + r.shape, r.dtype)
                 for ps, r in template.items()}
-        for i, p in enumerate(pages):
-            for ps, r in t.far[(slot, p)].items():
+        for i, key in enumerate(pairs):
+            for ps, r in t.far[key].items():
                 rows[ps][i] = r
         serve = self._tier_fill(
-            serve, jnp.int32(slot), jnp.asarray(parr),
+            serve, slots, pages,
             {ps: jnp.asarray(v) for ps, v in rows.items()})
-        t.resident[slot, pages] = True
+        self.stats.dispatches += 1
+        self.stats.tier_fill_batches += 1
+        self.stats.tier_batch_pages_max = max(
+            self.stats.tier_batch_pages_max, len(pairs))
+        for s, p in pairs:
+            t.resident[s, p] = True
         if prefetch:
-            self.stats.tier_prefetch += len(pages)
+            self.stats.tier_prefetch += len(pairs)
         else:
-            self.stats.tier_fills += len(pages)
+            self.stats.tier_fills += len(pairs)
         return serve
 
-    def _tier_spill_pages(self, serve, slot: int, pages):
-        """Archive ``pages`` to the far store (first spill of a page
-        gathers its rows off device; later spills reuse the archived
-        copy — complete pages never change) and zero them on device."""
+    def _tier_spill_work(self, serve, work):
+        """Archive EVERY (slot, pages) entry of ``work`` to the far store
+        (first spill of a page gathers its rows off device — one batched
+        gather for all first-timers; later spills reuse the archived
+        copy, complete pages never change) and zero the device rows in
+        ONE batched scatter."""
         t = self._tier
-        pages = [int(p) for p in pages]
-        to_gather = [p for p in pages if (slot, p) not in t.far]
+        pairs = [(int(s), int(p)) for s, pg in work for p in pg]
+        to_gather = [key for key in pairs if key not in t.far]
         if to_gather:
-            rows = jax.device_get(self._tier_gather(serve,
-                                                    jnp.int32(slot)))
-            t.store_rows(slot, to_gather, rows)
-        parr = np.full((t.n_pages,), -1, np.int32)
-        parr[:len(pages)] = pages
-        serve = self._tier_spill(serve, jnp.int32(slot), jnp.asarray(parr))
-        t.resident[slot, pages] = False
-        self.stats.tier_spills += len(pages)
+            gs, gp = self._tier_pair_vectors(to_gather)
+            rows = jax.device_get(self._tier_gather(serve, gs, gp))
+            self.stats.dispatches += 1
+            self.stats.tier_gather_batches += 1
+            t.store_pair_rows([s for s, _ in to_gather],
+                              [p for _, p in to_gather], rows,
+                              len(to_gather))
+        slots, pages = self._tier_pair_vectors(pairs)
+        serve = self._tier_spill(serve, slots, pages)
+        self.stats.dispatches += 1
+        self.stats.tier_spill_batches += 1
+        self.stats.tier_batch_pages_max = max(
+            self.stats.tier_batch_pages_max, len(pairs))
+        for s, p in pairs:
+            t.resident[s, p] = False
+        self.stats.tier_spills += len(pairs)
         return serve
 
     def _tier_select(self, need: np.ndarray, need_dev, act_dev):
@@ -839,6 +993,7 @@ class Engine:
         b = self.batch
         logits, serve2 = self._dec_sel(self.params, b.serve, self._tok,
                                        act_dev, need_dev)
+        self.stats.dispatches += 1
         sel_by, hot_by = self._tier_digest(serve2, need)
         miss_work = []
         for slot in np.nonzero(need)[0]:
@@ -849,13 +1004,12 @@ class Engine:
             if missing:
                 miss_work.append((slot, missing))
         if miss_work:
-            serve = b.serve
-            for slot, missing in miss_work:
-                serve = self._tier_fill_pages(serve, slot, missing,
-                                              prefetch=False)
-            b.serve = serve
-            logits, serve2 = self._dec_sel(self.params, serve, self._tok,
-                                           act_dev, need_dev)
+            # every missed slot's repair rides ONE batched fill (PR 10)
+            b.serve = self._tier_fill_work(b.serve, miss_work,
+                                           prefetch=False)
+            logits, serve2 = self._dec_sel(self.params, b.serve,
+                                           self._tok, act_dev, need_dev)
+            self.stats.dispatches += 1
         self._tier_plan = (need.copy(), sel_by, hot_by)
         return logits, serve2
 
@@ -867,6 +1021,7 @@ class Engine:
         need, sel_by, hot_by = self._tier_plan
         self._tier_plan = None
         b = self.batch
+        fill_work, spill_work = [], []
         for slot in np.nonzero(need)[0]:
             slot = int(slot)
             if not b.active[slot]:          # retired this step
@@ -874,10 +1029,18 @@ class Engine:
             to_fill, to_spill = self._tier.plan_refresh(
                 slot, int(b.lengths[slot]), sel_by[slot], hot_by[slot])
             if to_fill:
-                b.serve = self._tier_fill_pages(b.serve, slot, to_fill,
-                                                prefetch=True)
+                fill_work.append((slot, to_fill))
             if to_spill:
-                b.serve = self._tier_spill_pages(b.serve, slot, to_spill)
+                spill_work.append((slot, to_spill))
+        # the whole refresh plan rides ONE batched gather-fill and ONE
+        # batched spill across every (slot, page) pair (PR 10) — the
+        # per-slot per-op dispatch storm was the tiered engine's largest
+        # fixed cost at small page counts
+        if fill_work:
+            b.serve = self._tier_fill_work(b.serve, fill_work,
+                                           prefetch=True)
+        if spill_work:
+            b.serve = self._tier_spill_work(b.serve, spill_work)
 
     def tier_force_spill(self, uid: int) -> int:
         """Test/chaos hook: spill EVERY complete non-sink page of
@@ -907,7 +1070,7 @@ class Engine:
                  if t.resident[slot, p]]
         if pages:
             with self._mesh_ctx():
-                b.serve = self._tier_spill_pages(b.serve, slot, pages)
+                b.serve = self._tier_spill_work(b.serve, [(slot, pages)])
         return len(pages)
 
     # ------------------------------------------------------------------
@@ -956,6 +1119,7 @@ class Engine:
         the prefill logits row and advance the slot's generation index."""
         base, temp, topp = self._samp_host[slot]
         first = self._sample_one(logits_row, base, 0, temp, topp)
+        self.stats.dispatches += 1
         b = self.batch
         b.samp_gen = b.samp_gen.at[slot].set(1)
         self._tok = self._tok.at[slot].set(first)
@@ -989,6 +1153,7 @@ class Engine:
             logits, small = self._prefill(self.params, prompt)
             self.batch.serve = self._pack(self.batch.serve, small,
                                           jnp.int32(slot))
+            self.stats.dispatches += 2          # prefill + pack
             first = self._first_token(slot, logits[0])
         if self._tier is not None:
             self._tier.reset_slot(slot)   # pack rewrote every device row
@@ -1017,6 +1182,7 @@ class Engine:
         self._set_sampling(req, slot)
         with self._mesh_ctx():
             b.serve = self._reset(b.serve, jnp.int32(slot))
+            self.stats.dispatches += 1
         if self._tier is not None:
             self._tier.reset_slot(slot)   # reset cleared every device row
         b.prefilling[slot] = True
@@ -1041,6 +1207,29 @@ class Engine:
         comp = self._live[slot]
         comp._first_tok = first
         comp.first_token_step = self.stats.engine_steps
+        self._prompts.pop(slot, None)
+        self.stats.tokens_out += 1
+        b.remaining[slot] -= 1
+        if b.remaining[slot] <= 0 or b.lengths[slot] >= self.capacity:
+            self._retire(slot)
+
+    def _finish_prefill_fused(self, slot: int, trace_blk, j: int,
+                              engine_step: int):
+        """In-scan prompt completion: iteration ``j`` of a fused window
+        fed this slot's last prompt tokens and sampled its first token
+        in-graph from the chunk logits (generation index 0 — the same
+        row-wise sampling lane as ``_first_token``). The decode half
+        never writes non-active rows, so trace row ``j`` still holds
+        that token when the window returns. Host side mirrors
+        ``_finish_prefill``: the slot flips to READY and joins decoding
+        at the next shared refresh boundary."""
+        b = self.batch
+        b.prefilling[slot] = False
+        b.ready[slot] = True
+        b.phase[slot] = 0          # select on the slot's first decode step
+        comp = self._live[slot]
+        comp._first_tok = trace_blk[j, slot]
+        comp.first_token_step = engine_step
         self._prompts.pop(slot, None)
         self.stats.tokens_out += 1
         b.remaining[slot] -= 1
@@ -1121,6 +1310,13 @@ class Engine:
     # the mixed prefill+decode step
     # ------------------------------------------------------------------
 
+    def _chunk_shards(self) -> int:
+        """Shard count the chunk allocator scores against (FIFO splits
+        under anything but balanced admission)."""
+        n = (self.balance_shards or self.plan.balance_shards
+             if self.admission == "balanced" else 1)
+        return max(n, 1)
+
     def _schedule_chunks(self):
         """Distribute this step's chunk budget over the prefilling slots.
 
@@ -1136,12 +1332,10 @@ class Engine:
             return None
         from repro.sched import balance
         slots.sort(key=lambda i: self._live[i]._seq)
-        n_shards = (self.balance_shards or self.plan.balance_shards
-                    if self.admission == "balanced" else 1)
         alloc = balance.chunk_allocation(
             [int(b.lengths[i]) for i in slots],
             [int(b.prompt_left[i]) for i in slots],
-            self.prefill_chunk, n_shards=max(n_shards, 1),
+            self.prefill_chunk, n_shards=self._chunk_shards(),
             page_size=self.cfg.h2eal.page_size)
         tokens = np.zeros((b.max_batch, self.prefill_chunk), np.int32)
         clens = np.zeros((b.max_batch,), np.int32)
@@ -1152,6 +1346,51 @@ class Engine:
             tokens[i, :n] = self._prompts[i][fed:fed + n]
             clens[i] = n
         return tokens, clens
+
+    def _plan_window_chunks(self, n_iters: int):
+        """Presimulate the per-step chunk scheduler for ``n_iters``
+        in-scan iterations WITHOUT touching the host mirrors: the
+        allocator (sched/balance.chunk_allocation) is a deterministic
+        function of (lengths, prompt_left) over the prefilling slots, so
+        replaying it on local copies yields exactly the chunk blocks the
+        per-step loop would feed — except that no admission can join
+        mid-window (chunked-admission invariance keeps per-slot traces
+        exact either way; docs/serving.md §Fused decode windows).
+        Returns (tokens (L, B, C), clens (L, B), finish (L, B)) numpy
+        arrays, or None when nothing is prefilling."""
+        b = self.batch
+        slots = [i for i in range(b.max_batch) if b.prefilling[i]]
+        if not slots:
+            return None
+        from repro.sched import balance
+        slots.sort(key=lambda i: self._live[i]._seq)
+        n_shards = self._chunk_shards()
+        chunk = self.prefill_chunk
+        lengths = {i: int(b.lengths[i]) for i in slots}
+        left = {i: int(b.prompt_left[i]) for i in slots}
+        tokens = np.zeros((n_iters, b.max_batch, chunk), np.int32)
+        clens = np.zeros((n_iters, b.max_batch), np.int32)
+        finish = np.zeros((n_iters, b.max_batch), bool)
+        for j in range(n_iters):
+            live = [i for i in slots if left[i] > 0]
+            if not live:
+                break
+            alloc = balance.chunk_allocation(
+                [lengths[i] for i in live], [left[i] for i in live],
+                chunk, n_shards=n_shards,
+                page_size=self.cfg.h2eal.page_size)
+            for i, n in zip(live, alloc):
+                if n <= 0:
+                    continue
+                fed = lengths[i]
+                tokens[j, i, :n] = self._prompts[i][fed:fed + n]
+                clens[j, i] = n
+                lengths[i] += n
+                left[i] -= n
+                if left[i] == 0:
+                    # leaves the pool: READY slots take no more chunks
+                    finish[j, i] = True
+        return tokens, clens, finish
 
     def _promote_ready(self):
         """Activate READY slots only when every active slot sits at its
@@ -1188,6 +1427,20 @@ class Engine:
         logits and starts decoding next step."""
         b = self.batch
         self._promote_ready()
+        self._prev_engine_steps = self.stats.engine_steps
+        # fused decode-window routing (PR 10): strictly between two
+        # selection boundaries every decoding slot runs reuse steps
+        # only, so the stretch to the next boundary collapses into ONE
+        # dispatched scan. Boundary steps (any slot due a selection
+        # refresh) and chunk-only steps stay per-step.
+        if (self._fused is not None and b.active.any()
+                and not (b.active
+                         & (b.phase % self.share_window == 0)).any()):
+            with self._mesh_ctx():
+                self._window_once(b.active.copy())
+            if self._cost_model is not None:
+                self._maybe_rebalance()
+            return
         chunk_work = (self._schedule_chunks()
                       if self.prefill_chunk is not None else None)
         active = b.active.copy()
@@ -1200,6 +1453,7 @@ class Engine:
                 logits_c, b.serve = self._chunk(
                     self.params, b.serve, jnp.asarray(toks),
                     jnp.asarray(clens), jnp.asarray(clens > 0))
+                self.stats.dispatches += 1
                 self.stats.prefill_chunks += 1
                 for slot in np.nonzero(clens)[0]:
                     slot = int(slot)
@@ -1261,8 +1515,14 @@ class Engine:
         (a retirement this step, or the interval boundary) and outside
         the cooldown window."""
         due = self._rebalance_due
-        if (self.rebalance == "interval" and self.stats.engine_steps
-                % self.rebalance_interval == 0):
+        # interval trigger: fire when this step CROSSED a multiple of
+        # the interval. Identical to `engine_steps % interval == 0` for
+        # per-step dispatch (steps advance by 1), but a fused window
+        # advances engine_steps by up to w-1 at once and may jump past
+        # the multiple without landing on it.
+        if (self.rebalance == "interval"
+                and self.stats.engine_steps // self.rebalance_interval
+                > self._prev_engine_steps // self.rebalance_interval):
             due = True
         if not due:
             return
@@ -1309,6 +1569,7 @@ class Engine:
              b.samp_gen) = self._migrate(
                 b.serve, self._tok, b.samp_base, b.samp_temp,
                 b.samp_topp, b.samp_gen, jnp.int32(src), jnp.int32(dst))
+        self.stats.dispatches += 1
         for arr, clear in ((b.active, False), (b.prefilling, False),
                            (b.ready, False), (b.lengths, 0),
                            (b.phase, 0), (b.uid, -1), (b.remaining, 0),
@@ -1342,7 +1603,7 @@ class Engine:
         if self.spec_tokens is not None:
             return self._verify_once(active)
         b = self.batch
-        step_idx = self.stats.decode_steps
+        step_idx = self._trace_rows
         # selection refresh: each slot's own share-window cadence (so a
         # slot's schedule is independent of the global clock, other
         # slots, and how its admission was chunked)
@@ -1359,10 +1620,12 @@ class Engine:
             else:
                 logits, b.serve = self._dec_sel(
                     self.params, b.serve, self._tok, act_dev, need_dev)
+                self.stats.dispatches += 1
             self.stats.select_steps += 1
         else:
             logits, b.serve = self._dec_reuse(
                 self.params, b.serve, self._tok, act_dev)
+            self.stats.dispatches += 1
             self.stats.reuse_steps += 1
         # keep non-active rows of the token feed: a slot that finished
         # prefilling THIS step already holds its first token, which this
@@ -1372,8 +1635,10 @@ class Engine:
         # the pre-sampling engine)
         tok, b.samp_gen = self._sample(logits, b.samp_base, b.samp_gen,
                                        b.samp_temp, b.samp_topp, act_dev)
+        self.stats.dispatches += 1
         self._tok = jnp.where(act_dev, tok, self._tok)
-        self._trace.append(self._tok)
+        self._trace.append(self._tok[None])
+        self._trace_rows += 1
         self.trace_engine_steps.append(self.stats.engine_steps)
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(active.mean())
@@ -1391,6 +1656,95 @@ class Engine:
             # prefetch/spill for the NEXT share window, one window ahead
             # of the selection refresh that will consume the pages
             self._tier_refresh()
+
+    def _window_once(self, active: np.ndarray):
+        """One fused decode window: every reuse step from here to the
+        next selection boundary (capped at ``decode_window``) as ONE
+        dispatched scan, with sampling and budget-driven retirement
+        in-graph (runtime/serve.make_fused_window_step). The host
+        applies the whole window's bookkeeping afterwards from the
+        budget vector alone — a slot emits EXACTLY ``budgets[i]`` tokens
+        by construction, so no device readback is needed and the loop
+        stays non-blocking."""
+        from repro.sched import window_budgets
+        b = self.batch
+        # reuse steps only read pinned-resident pages (spill candidates
+        # exclude the selection, sink, and local sections), so a fused
+        # window can never cold-miss; any pending refresh plan was
+        # already consumed by the selection step that opened this window
+        assert self._tier_plan is None, "refresh plan crossed a boundary"
+        w = self.share_window
+        residue = int(b.phase[np.nonzero(active)[0][0]] % w)
+        n_useful, budgets = window_budgets(
+            active, b.remaining, b.lengths, capacity=self.capacity,
+            phase_residue=residue, share_window=w,
+            window=self._fused_len)
+        if not np.array_equal(self._act_mirror, active):
+            self._act_dev = jnp.asarray(active)
+            self._act_mirror = active.copy()
+        act_dev = self._act_dev
+        plan = (self._plan_window_chunks(self._fused_len)
+                if self._fused_mix is not None else None)
+        e0 = self.stats.engine_steps
+        if plan is None:
+            trace_blk, b.serve, self._tok, b.samp_gen = self._fused(
+                self.params, b.serve, self._tok, act_dev, b.samp_gen,
+                jnp.asarray(budgets), b.samp_base, b.samp_temp,
+                b.samp_topp)
+        else:
+            toks, clens, finish = plan
+            trace_blk, b.serve, self._tok, b.samp_gen = self._fused_mix(
+                self.params, b.serve, self._tok, act_dev, b.samp_gen,
+                jnp.asarray(budgets), b.samp_base, b.samp_temp,
+                b.samp_topp, jnp.asarray(toks), jnp.asarray(clens),
+                jnp.asarray(finish))
+        self.stats.dispatches += 1
+        self.stats.fused_windows += 1
+        max_e = int(budgets[active].max())
+        chunk_iters = (int((plan[1].sum(axis=1) > 0).sum())
+                       if plan is not None else 0)
+        # the window consumed as many logical engine steps as its
+        # longest-running half (per-step would interleave them 1:1)
+        self.stats.engine_steps += max(max_e, chunk_iters)
+        self.stats.fused_steps += max_e
+        self.stats.decode_steps += max_e
+        self.stats.reuse_steps += max_e
+        self.stats.prefill_chunks += chunk_iters
+        row0 = self._trace_rows
+        self._trace.append(trace_blk[:max_e])
+        self._trace_rows += max_e
+        for j in range(max_e):
+            self.trace_engine_steps.append(e0 + 1 + j)
+            self.stats.occupancy_sum += float(
+                (budgets > j).sum()) / b.max_batch
+        # chunk bookkeeping first (disjoint slot sets): a slot whose
+        # prompt completed in-scan flips to READY exactly where the
+        # per-step mixed step would have flipped it
+        if plan is not None:
+            for j in range(self._fused_len):
+                for slot in np.nonzero(clens[j])[0]:
+                    slot = int(slot)
+                    b.lengths[slot] += int(clens[j, slot])
+                    b.prompt_left[slot] -= int(clens[j, slot])
+                    if finish[j, slot]:
+                        self._finish_prefill_fused(slot, trace_blk, j,
+                                                   e0 + 1 + j)
+        for slot in np.nonzero(active)[0]:
+            slot = int(slot)
+            emitted = int(budgets[slot])
+            comp = self._live[slot]
+            comp._step_idx.extend(range(row0, row0 + emitted))
+            comp._slot_idx.extend([slot] * emitted)
+            b.lengths[slot] += emitted
+            # a survivor's budget is exactly n_useful (any smaller
+            # budget means a stop condition fired → it retires below),
+            # so live phases stay aligned at the next boundary
+            b.phase[slot] += emitted
+            b.remaining[slot] -= emitted
+            self.stats.tokens_out += emitted
+            if (b.remaining[slot] <= 0
+                    or b.lengths[slot] >= self.capacity):
+                self._retire(slot)
 
     def _verify_once(self, active: np.ndarray):
         """The speculative decode half of a step: draft k-1 tokens per
@@ -1430,6 +1784,7 @@ class Engine:
             self.params, b.serve, tokens, act_dev, jnp.asarray(need),
             b.samp_base, b.samp_gen, b.samp_temp, b.samp_topp,
             jnp.asarray(max_emit, jnp.int32))
+        self.stats.dispatches += 1
         self._tok = jnp.where(act_dev, next_dev, self._tok)
         if need.any():
             self.stats.select_steps += 1
@@ -1437,9 +1792,10 @@ class Engine:
             self.stats.reuse_steps += 1
         # the trace gets k rows per verify step (the coupled targets);
         # a slot that accepted n of them owns rows [base, base+n)
-        trace_base = len(self._trace)
+        trace_base = self._trace_rows
+        self._trace.append(targets.T)               # (k, B) block
+        self._trace_rows += k
         for j in range(k):
-            self._trace.append(targets[:, j])
             self.trace_engine_steps.append(self.stats.engine_steps)
         self.stats.decode_steps += 1
         self.stats.spec_steps += 1
@@ -1472,7 +1828,7 @@ class Engine:
         """Materialize completion tokens from the device-side trace.
         Idempotent; the only device sync in the serving loop."""
         if self._trace:
-            trace = np.asarray(jnp.stack(self._trace))      # (T, B)
+            trace = np.asarray(jnp.concatenate(self._trace))  # (T, B)
         else:
             trace = np.zeros((0, self.batch.max_batch), np.int32)
         for comp in list(self.completions.values()) + list(
@@ -1540,6 +1896,8 @@ class Engine:
             "reset_metrics() requires an idle engine")
         self.finalize()           # materialize anything still deferred
         self._trace.clear()
+        self._trace_rows = 0
+        self._prev_engine_steps = 0
         self.trace_engine_steps.clear()
         self.completions = {}
         self.stats = EngineStats()
@@ -1573,6 +1931,10 @@ class Engine:
             sizes["tier_fill"] = jit_cache_size(self._tier_fill)
         sizes["sample"] = jit_cache_size(self._sample)
         sizes["sample_one"] = jit_cache_size(self._sample_one)
+        if self._fused is not None:
+            sizes["fused_window"] = jit_cache_size(self._fused)
+        if self._fused_mix is not None:
+            sizes["fused_window_mixed"] = jit_cache_size(self._fused_mix)
         if self.rebalance != "off":
             sizes["migrate"] = jit_cache_size(self._migrate)
         if self.spec_tokens is not None:

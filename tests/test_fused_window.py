@@ -1,0 +1,316 @@
+"""Fused decode windows: one-dispatch share-window scan, bit-exact.
+
+``Engine(decode_window=w)`` runs the reuse steps between two selection
+boundaries as ONE dispatched jit — a lax.scan over the per-step decode
+body with in-scan sampling (the per-request RNG lanes advance inside
+the scan) and device-side retirement: a slot that exhausts its budget
+mid-window flips its active lane inside the scan, the host learns at
+the window boundary. The correctness contract under test:
+
+  * token traces are BIT-IDENTICAL to the per-step engine across
+    decode_window ∈ {1, w, 2w} x {greedy, sampled} x {packed, chunked}
+    with ragged budgets forcing mid-window retirement (the engine has
+    no EOS token — budget exhaustion IS the retirement path);
+  * the fused jits obey the zero-post-warmup-recompile invariant (one
+    compiled entry each for ``fused_window`` / ``fused_window_mixed``);
+  * speculative decode does not silently degrade: spec_tokens with
+    decode_window > 1 is rejected at construction (the fallback to
+    per-step dispatch must be explicit — pass decode_window=None);
+  * tiered residency composes: residency only changes at selection
+    boundaries and reuse steps never touch non-selected pages, so a
+    chaos-forced full spill at a boundary is repaired by the select
+    miss-replay and the fused windows after it stay bit-exact vs the
+    all-resident per-step oracle (docs/serving.md §Fused decode
+    windows).
+
+The reduced config pins share_window=2 (a single reuse step between
+selects), so the suite widens it to W=4 — fused windows of 3 scan
+iterations — via dataclasses.replace.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serving import Engine, Request
+from tests.test_serving import CAP, REPO, _mixed_workload
+
+W = 4              # widened share window (reduced configs pin 2)
+
+
+def _widen(cfg, w=W):
+    return dataclasses.replace(
+        cfg, h2eal=dataclasses.replace(cfg.h2eal, share_window=w))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _widen(reduced(get_arch("smollm-360m")))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _workload(cfg, *, sampled=False, seed=2, n=4):
+    """The mixed churny workload (ragged max_new=3+2i: budgets straddle
+    window boundaries, so slots retire mid-window), optionally with
+    stochastic sampling params (RNG keys owned by (seed, uid), so any
+    engine configuration must reproduce the same trace)."""
+    reqs = _mixed_workload(cfg, seed=seed, n=n)
+    if sampled:
+        reqs = [dataclasses.replace(r, temperature=0.8, top_p=0.9)
+                for r in reqs]
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def perstep_trace(model):
+    """Per-step-dispatch reference traces, one per (sampled, chunk)."""
+    cfg, params = model
+    out = {}
+    for sampled in (False, True):
+        for chunk in (None, 8):
+            eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                         prompt_buckets=[16, 24], prefill_chunk=chunk)
+            comps = eng.run(_workload(cfg, sampled=sampled))
+            out[(sampled, chunk)] = {u: c.tokens for u, c in comps.items()}
+    return out
+
+
+@pytest.mark.parametrize("chunk", [None, 8], ids=["packed", "chunked"])
+@pytest.mark.parametrize("sampled", [False, True], ids=["greedy", "sampled"])
+@pytest.mark.parametrize("dw", [1, W, 2 * W])
+def test_fused_matches_perstep(model, perstep_trace, dw, sampled, chunk):
+    """The acceptance matrix: fused token traces equal the per-step
+    engine's bit-for-bit, across window sizes (1 = per-step dispatch,
+    W = exactly one window per share cadence, 2W = clamped to the
+    share-window-1 scan the cadence allows), greedy and stochastic
+    sampling, packed and chunked admission, with ragged budgets
+    retiring slots mid-window (device-side retirement)."""
+    cfg, params = model
+    ref = perstep_trace[(sampled, chunk)]
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], prefill_chunk=chunk,
+                 decode_window=dw)
+    comps = eng.run(_workload(cfg, sampled=sampled))
+    assert sorted(comps) == sorted(ref)
+    for uid in sorted(ref):
+        assert comps[uid].tokens == ref[uid], (dw, sampled, chunk, uid)
+    s = eng.stats
+    if dw > 1:
+        assert s.fused_windows > 0, (dw, sampled, chunk)
+        assert s.fused_steps >= s.fused_windows
+        # every fused step replaced a would-be per-step dispatch
+        assert s.reuse_steps >= s.fused_steps
+    else:
+        assert s.fused_windows == 0     # decode_window=1 IS per-step
+
+
+def test_fused_fewer_dispatches_than_perstep(model):
+    """The point of the PR, observable in EngineStats: the fused engine
+    serves the identical workload in strictly fewer dispatches than the
+    per-step engine, and its steps_per_dispatch rises above 1."""
+    cfg, params = model
+    base = Engine(cfg, params, max_batch=2, capacity=CAP,
+                  prompt_buckets=[16, 24])
+    base.run(_workload(cfg))
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], decode_window=W)
+    eng.run(_workload(cfg))
+    assert base.stats.decode_steps == eng.stats.decode_steps
+    assert eng.stats.dispatches < base.stats.dispatches, (
+        eng.stats.dispatches, base.stats.dispatches)
+    assert eng.stats.steps_per_dispatch > base.stats.steps_per_dispatch
+    assert base.stats.fused_windows == 0
+
+
+def test_fused_zero_recompile(model):
+    """The fused jits join the zero-post-warmup-recompile invariant:
+    exactly one compiled entry for ``fused_window`` (and the mixed
+    prefill+decode variant when chunked), stable across a second,
+    differently-shaped workload."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], prefill_chunk=8,
+                 decode_window=W)
+    eng.run(_workload(cfg))
+    sizes0 = eng.jit_cache_sizes()
+    assert sizes0["fused_window"] in (-1, 1), sizes0
+    assert sizes0["fused_window_mixed"] in (-1, 1), sizes0
+    eng.reset_metrics()
+    eng.run(_workload(cfg, sampled=True, seed=11, n=3))
+    assert eng.jit_cache_sizes() == sizes0
+    # a per-step engine never builds the fused entries at all
+    base = Engine(cfg, params, max_batch=2, capacity=CAP,
+                  prompt_buckets=[16, 24])
+    assert "fused_window" not in base.jit_cache_sizes()
+
+
+def test_fused_construction_validation(model):
+    """decode_window is validated at construction: non-positive windows
+    are rejected, and speculative decode must opt INTO per-step dispatch
+    explicitly (decode_window=None) rather than silently degrading."""
+    cfg, params = model
+    kw = dict(max_batch=2, capacity=CAP, prompt_buckets=[16, 24])
+    with pytest.raises(ValueError, match="decode_window"):
+        Engine(cfg, params, decode_window=0, **kw)
+    with pytest.raises(ValueError, match="per-step dispatch"):
+        Engine(cfg, params, decode_window=W, spec_tokens=4, **kw)
+    # the documented fallback spelling constructs (and stays per-step)
+    eng = Engine(cfg, params, decode_window=None, spec_tokens=4, **kw)
+    assert eng.decode_window == 1
+    assert "fused_window" not in eng.jit_cache_sizes()
+
+
+# ---------------------------------------------------------------------------
+# Tiered residency inside fused windows (the ISSUE-10 tier bugfix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tier_model():
+    """Deep-prompt tiered config (as tests/test_tiered.py: shrink local
+    and select_budget so the spillable page-table section dominates),
+    share-window-widened so fused windows have real length."""
+    cfg = _widen(reduced(get_arch("smollm-360m")))
+    cfg = dataclasses.replace(cfg, h2eal=dataclasses.replace(
+        cfg.h2eal, local=8, select_budget=16))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+TCAP = 128
+
+
+def test_fused_tiered_force_spill_bit_exact(tier_model):
+    """Chaos hook inside the fused engine: spill EVERY spillable page —
+    including the currently selected ones — at a selection boundary.
+    The boundary select (still per-step) detects the cold selection,
+    demand-fills, and replays; the fused windows after it run on the
+    repaired hot set. Residency never changes inside a window (reuse
+    steps only read selected+sink+local pages, all pinned hot), so the
+    fused tiered trace equals the all-resident per-step oracle bit for
+    bit — the miss is served late, never skipped."""
+    cfg, params = tier_model
+    req = lambda: Request(uid=0, prompt=np.random.default_rng(7).integers(
+        0, cfg.vocab_size, size=(64,)).astype(np.int32), max_new=14)
+    ref = Engine(cfg, params, max_batch=1, capacity=TCAP,
+                 prompt_buckets=[64]).run([req()])[0].tokens
+
+    eng = Engine(cfg, params, max_batch=1, capacity=TCAP,
+                 prompt_buckets=[64], hot_pages=12, decode_window=W)
+    eng.submit(req())
+    eng._admit()
+    w = eng.share_window
+    forced = 0
+    steps = 0
+    while eng.busy():
+        b = eng.batch
+        if (not forced and steps >= 2 and b.active[0]
+                and b.phase[0] % w == 0):
+            forced = eng.tier_force_spill(0)
+        eng.step()
+        steps += 1
+    assert forced > 0
+    eng.finalize()
+    assert eng.completions[0].tokens == ref
+    s = eng.stats
+    assert s.fused_windows > 0, "windows never fused"
+    assert s.tier_misses > 0, "forced-cold selection never missed"
+    assert s.tier_fills == s.tier_misses     # each one demand-filled
+    assert s.tier_hit_rate < 1.0
+
+
+def test_fused_tiered_workload_matches_resident(tier_model):
+    """Tight hot-set budget + fused windows over the churny tiered
+    workload: spills and prefetches actually happen between windows and
+    the trace stays bit-identical to the all-resident per-step oracle;
+    the batched refresh path reports its transfer batch sizes."""
+    from tests.test_tiered import _workload as tier_workload
+
+    cfg, params = tier_model
+    ref = {u: c.tokens for u, c in
+           Engine(cfg, params, max_batch=2, capacity=TCAP,
+                  prompt_buckets=[64]).run(tier_workload(cfg, 0)).items()}
+    eng = Engine(cfg, params, max_batch=2, capacity=TCAP,
+                 prompt_buckets=[64], hot_pages=6, decode_window=W)
+    comps = eng.run(tier_workload(cfg, 0))
+    assert sorted(comps) == sorted(ref)
+    for uid in sorted(ref):
+        assert comps[uid].tokens == ref[uid], uid
+    s = eng.stats
+    assert s.fused_windows > 0
+    assert s.tier_spills > 0
+    # satellite: plan_refresh applies as batched transfers — the batch
+    # counters are live and each batch moved >= 1 page
+    assert s.tier_spill_batches > 0
+    assert s.tier_fill_batches > 0
+    assert s.tier_batch_pages_max >= 1
+    assert s.tier_fill_batch_mean >= 1.0
+    assert s.tier_spill_batch_mean >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused windows (8-fake-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+FUSED_SHMAP_CODE = """
+import dataclasses
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serving import Engine
+from tests.test_serving import CAP, _mixed_workload
+from tests.test_fused_window import W, _widen, _workload
+
+cfg = _widen(reduced(get_arch("smollm-360m")))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+# per-step default-layout reference on the widened config
+eng0 = Engine(cfg, params, max_batch=2, capacity=CAP,
+              prompt_buckets=[16, 24])
+c0 = eng0.run(_workload(cfg))
+# the fused engine under REAL shard_map co-placement: the scanned reuse
+# body dispatches through the layout's partial-attention decode with
+# pinned out-shardings, chunked prefill riding the mixed fused jit
+eng1 = Engine(cfg, params, max_batch=2, capacity=CAP,
+              prompt_buckets=[16, 24], layout="coplace_shmap",
+              admission="balanced", prefill_chunk=7, decode_window=W)
+c1 = eng1.run(_workload(cfg))
+assert sorted(c0) == sorted(c1)
+for uid in sorted(c0):
+    assert c0[uid].tokens == c1[uid].tokens, (
+        uid, c0[uid].tokens, c1[uid].tokens)
+assert eng1.stats.fused_windows > 0, "windows never fused"
+sizes0 = eng1.jit_cache_sizes()
+assert sizes0["fused_window"] in (-1, 1), sizes0
+assert sizes0["fused_window_mixed"] in (-1, 1), sizes0
+eng1.reset_metrics()
+c2 = eng1.run(_workload(cfg, sampled=True, seed=5, n=3))
+assert eng1.jit_cache_sizes() == sizes0, (sizes0, eng1.jit_cache_sizes())
+print("FUSED_SHMAP_EXACT")
+"""
+
+
+@pytest.mark.slow
+def test_fused_coplace_shmap_exact_8dev():
+    """8-fake-device subprocess (the ISSUE-10 acceptance check): the
+    FUSED coplace_shmap engine — the share-window scan dispatched
+    through shard_map partial attention with pinned out-shardings and
+    chunked prefill inside the window — is token-exact vs the per-step
+    default-layout engine, and the greedy->stochastic rerun compiles
+    nothing new (zero post-warmup recompiles on the fused entries)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", FUSED_SHMAP_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=520, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "FUSED_SHMAP_EXACT" in out.stdout

@@ -281,6 +281,52 @@ def test_layout_conformance_tiered(model, default_trace, name):
     assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
 
 
+@pytest.fixture(scope="module")
+def fused_trace(model):
+    """Per-step reference on a share-window-widened config: the reduced
+    config pins share_window=2, which leaves fused windows a single
+    scan iteration — widening to 4 gives the fused scan real length.
+    (share_window only changes the selection cadence, never parameter
+    shapes, so the module params are reused.)"""
+    import dataclasses
+
+    cfg, params = model
+    wcfg = dataclasses.replace(
+        cfg, h2eal=dataclasses.replace(cfg.h2eal, share_window=4))
+    eng = Engine(wcfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24])
+    mixed = {u: c.tokens
+             for u, c in eng.run(_mixed_workload(wcfg, n=3)).items()}
+    return wcfg, mixed
+
+
+@pytest.mark.parametrize("name", LAYOUTS)
+def test_layout_conformance_fused(model, fused_trace, name):
+    """Fused decode-window conformance, for free per registry entry:
+    ``Engine(decode_window=w)`` routes the share-window scan through
+    the layout's ``decode_window`` hook (core/layouts.py — the default
+    implementation jit-scans the layout's own reuse body), so every
+    layout including the shard_map co-placement entry must reproduce
+    the per-step token trace bit-identically, keep one compiled
+    ``fused_window`` entry, and never recompile across
+    differently-shaped workloads. Future layouts inherit this sweep the
+    moment they register (docs/serving.md §Fused decode windows)."""
+    _, params = model
+    wcfg, mixed_ref = fused_trace
+    eng = Engine(wcfg, params, max_batch=2, capacity=CAP,
+                 prompt_buckets=[16, 24], layout=name, decode_window=4)
+    mixed = eng.run(_mixed_workload(wcfg, n=3))
+    assert sorted(mixed) == sorted(mixed_ref)
+    for uid in sorted(mixed_ref):
+        assert mixed[uid].tokens == mixed_ref[uid], (name, uid)
+    assert eng.stats.fused_windows > 0, name
+    sizes0 = eng.jit_cache_sizes()
+    assert sizes0["fused_window"] in (-1, 1), (name, sizes0)
+    eng.reset_metrics()
+    eng.run(_mixed_workload(wcfg, seed=11, n=2))
+    assert eng.jit_cache_sizes() == sizes0, name       # no recompiles
+
+
 def _sampled_workload(cfg, *, n=3, seed=2, temperature=0.8, top_p=0.9):
     """The mixed churny workload with stochastic sampling params; RNG
     keys are owned by (request.seed, uid), so the same list reproduces
